@@ -1,0 +1,56 @@
+"""Paper Fig 7: HST scaling in (k, s, N) — approximately linear."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import find_discords
+from repro.data.timeseries import ecg_like, with_implanted_anomalies
+
+from .util import BenchTable
+
+
+def run(small: bool = True, seed: int = 0) -> dict:
+    n = 12000 if small else 30000
+    x, _ = with_implanted_anomalies(
+        ecg_like(n, seed=seed), n_anomalies=3, length=100, amp=0.5,
+        seed=seed)
+
+    tk = BenchTable("fig7-left (runtime vs k, normalized to k=1)",
+                    ["k", "calls", "ratio"])
+    base = None
+    ks = (1, 2, 4, 8)
+    ratios_k = []
+    for k in ks:
+        r = find_discords(x, 100, k, method="hst")
+        base = base or r.calls
+        ratios_k.append(r.calls / base)
+        tk.row(k, r.calls, f"{ratios_k[-1]:.2f}")
+
+    ts = BenchTable("fig7-right (calls vs s, normalized to s=100)",
+                    ["s", "calls", "ratio"])
+    base = None
+    ratios_s = []
+    for s in (100, 200, 400):
+        r = find_discords(x, s, 1, method="hst")
+        base = base or r.calls
+        ratios_s.append(r.calls / base)
+        ts.row(s, r.calls, f"{ratios_s[-1]:.2f}")
+
+    tn = BenchTable("fig7 (calls vs N)", ["N", "calls", "cps"])
+    cps = []
+    for m in (n // 4, n // 2, n):
+        r = find_discords(x[:m], 100, 1, method="hst")
+        cps.append(r.cps)
+        tn.row(m, r.calls, f"{r.cps:.1f}")
+
+    return {
+        "tables": [tk, ts, tn],
+        "claims": {
+            # linear-in-k => calls(k=8) ≈ 8x calls(k=1), allow 3x slack
+            "k_scaling_subquadratic": bool(ratios_k[-1] < 8 * 3),
+            # calls roughly independent of s (time ∝ s only via d-call cost)
+            "s_scaling_flat_calls": bool(ratios_s[-1] < 6.0),
+            # cps roughly constant in N => calls linear in N
+            "n_scaling_linear": bool(max(cps) < 6 * max(min(cps), 1e-9)),
+        },
+    }

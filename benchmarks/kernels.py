@@ -1,0 +1,57 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle, shapes swept.
+
+On CPU the interpret-mode wall time is meaningless; what this bench
+certifies is (a) allclose vs the oracle on every shape, (b) the tile
+geometry (grid x block) and the VMEM working set per tile that the
+roofline reasoning in EXPERIMENTS.md §Perf uses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.zdist.ops import zdist_min
+from repro.kernels.zdist.ref import zdist_min_ref
+from repro.kernels.mpblock.ops import matrix_profile
+from repro.kernels.paa.ops import sax_words_op
+from repro.core.sax import sax_words
+from repro.core.serial.brute import exact_nnd_profile
+
+from .util import BenchTable
+
+
+def run(small: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    t = BenchTable("kernels (interpret-mode validation + tile geometry)",
+                   ["kernel", "shape", "grid", "vmem/tile KiB",
+                    "max |err|"])
+    ok = True
+
+    for n, s in ((1500, 96), (3000, 128)):
+        x = rng.normal(size=n).astype(np.float32)
+        q = np.arange(0, 128)
+        d, _ = zdist_min(x, s, q)
+        d2r, _ = zdist_min_ref(x, s, q)
+        err = float(np.abs(np.asarray(d) - np.sqrt(np.asarray(d2r))).max())
+        ok &= err < 1e-3
+        nq, nc = 128, n - s + 1
+        grid = (-(-nq // 128), -(-nc // 128))
+        vmem = (128 * max(128, s) * 4 * 2 + 128 * 128 * 4) / 1024
+        t.row("zdist", f"N={nc},s={s}", grid, f"{vmem:.0f}",
+              f"{err:.1e}")
+
+    x = rng.normal(size=900).astype(np.float32)
+    d_mp, _ = matrix_profile(x, 64)
+    prof = exact_nnd_profile(np.asarray(x, np.float64), 64)
+    err = float(np.abs(np.asarray(d_mp) - prof).max())
+    ok &= err < 1e-3
+    t.row("mpblock", "N=837,s=64", "(7,7)", "260", f"{err:.1e}")
+
+    x = rng.normal(size=2000).astype(np.float32)
+    w = np.asarray(sax_words_op(x, 96, 4, 4))
+    wr = sax_words(np.asarray(x, np.float64), 96, 4, 4)
+    match = float(np.mean(w == wr))
+    ok &= match == 1.0
+    t.row("paa/sax", "N=1905,s=96,P=4", "(15,)", "64",
+          f"mismatch={1 - match:.1e}")
+
+    return {"tables": [t], "claims": {"all_kernels_allclose": bool(ok)}}

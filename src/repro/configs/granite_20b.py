@@ -1,0 +1,21 @@
+"""granite-20b — IBM Granite 20B code model (llama-arch, MQA).
+
+[arXiv:2405.04324; hf]  52L d_model=6144 48H (GQA kv=1 = MQA)
+d_ff=24576 vocab=49152, GELU MLP.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b", family="dense",
+    n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1,
+    d_ff=24_576, vocab_size=49_152,
+    ffn="gelu", pos="rope", rope_theta=10_000.0,
+    microbatch=16,              # d_ff=24576 activations @ mb=8: 28 GB
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+        vocab_size=256, dtype="float32", param_dtype="float32",
+        attn_q_chunk=16, attn_k_chunk=16)

@@ -1,0 +1,23 @@
+"""hymba-1.5b — NVIDIA Hymba: parallel attention + mamba heads.
+
+[arXiv:2411.13676; hf]  32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16.  Attention is sliding-window (hybrid blocks)
+so the arch stays sub-quadratic -> ``long_500k`` runs (DESIGN.md §6).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid", mixer="hymba",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab_size=32_001, ssm_state=16,
+    window=1024,                       # SWA in hybrid blocks
+    ffn="swiglu", pos="rope", rope_theta=10_000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, ssm_state=8, window=32,
+        dtype="float32", param_dtype="float32", attn_q_chunk=16,
+        attn_k_chunk=16, ssm_chunk=16)

@@ -1,0 +1,20 @@
+"""internlm2-1.8b — InternLM2 1.8B dense, GQA.
+
+[arXiv:2403.17297; hf]  24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b", family="dense",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=8192, vocab_size=92_544,
+    ffn="swiglu", pos="rope", rope_theta=1_000_000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, dtype="float32", param_dtype="float32",
+        attn_q_chunk=16, attn_k_chunk=16)

@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b — Moonlight 16B-A3B MoE.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf]  48L d_model=2048 16H (GQA kv=16)
+d_ff=1408 vocab=163840, MoE 64 experts top-6 (+ shared experts).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=163_840,
+    n_experts=64, top_k=6, n_shared_experts=2,
+    ffn="swiglu", pos="rope", rope_theta=50_000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=32,
+        vocab_size=256, n_experts=8, top_k=2, n_shared_experts=1,
+        dtype="float32", param_dtype="float32", attn_q_chunk=16,
+        attn_k_chunk=16)

@@ -1,0 +1,23 @@
+"""musicgen-medium — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284; hf]  48L d_model=1536 24H (kv=24) d_ff=6144
+vocab=2048.  The EnCodec audio frontend is a stub: ``input_specs``
+provides precomputed frame embeddings as a sequence prefix
+(conditioning), the backbone decodes EnCodec codes.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+    d_ff=6144, vocab_size=2048,
+    ffn="gelu", pos="rope", rope_theta=10_000.0,
+    frontend="audio",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=128, dtype="float32", param_dtype="float32",
+        attn_q_chunk=16, attn_k_chunk=16)

@@ -1,0 +1,22 @@
+"""olmoe-1b-7b — OLMoE 1B active / 7B total MoE.
+
+[arXiv:2409.02060; hf]  16L d_model=2048 16H (GQA kv=16) d_ff=1024
+vocab=50304, MoE 64 experts top-8.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab_size=50_304,
+    n_experts=64, top_k=8,
+    ffn="swiglu", pos="rope", rope_theta=10_000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=32,
+        vocab_size=256, n_experts=8, top_k=2,
+        dtype="float32", param_dtype="float32", attn_q_chunk=16,
+        attn_k_chunk=16)

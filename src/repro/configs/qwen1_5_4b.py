@@ -1,0 +1,20 @@
+"""qwen1.5-4b — Qwen1.5 4B dense, MHA (kv = heads) + QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B family scaling; hf]  40L d_model=2560 20H
+(kv=20) d_ff=6912 vocab=151936.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b", family="dense",
+    n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20,
+    d_ff=6912, vocab_size=151_936, qkv_bias=True,
+    ffn="swiglu", pos="rope", rope_theta=5_000_000.0,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, dtype="float32", param_dtype="float32",
+        attn_q_chunk=16, attn_k_chunk=16)

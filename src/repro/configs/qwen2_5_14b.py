@@ -1,0 +1,21 @@
+"""qwen2.5-14b — Qwen2.5 14B dense, GQA + QKV bias.
+
+[hf:Qwen/Qwen2.5-0.5B family scaling; hf]  48L d_model=5120 40H
+(GQA kv=8) d_ff=13824 vocab=152064.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13_824, vocab_size=152_064, qkv_bias=True,
+    ffn="swiglu", pos="rope", rope_theta=1_000_000.0,
+    microbatch=16,              # 48L x d5120 @ mb=8: 22.9 GB temp
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, dtype="float32", param_dtype="float32",
+        attn_q_chunk=16, attn_k_chunk=16)

@@ -1,0 +1,26 @@
+"""qwen2-vl-72b — Qwen2-VL 72B backbone with M-RoPE.
+
+[arXiv:2409.12191; hf]  80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064.  The ViT patch encoder (dynamic resolution) is a stub:
+``input_specs`` provides precomputed patch embeddings; M-RoPE assigns
+them (t, h, w) grid positions.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29_568, vocab_size=152_064, qkv_bias=True,
+    ffn="swiglu", pos="mrope", rope_theta=1_000_000.0,
+    frontend="vision",
+    microbatch=16,              # 80L x d8192 layer-scan carry @ mb=8
+    remat="full",               # would eat 10.7 GB alone; dots-saves
+    act_shard_hidden=True,      # add 20 GB more on this depth; SP-style
+)                               # residual sharding: 19->6.3 GB (§Perf)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, dtype="float32", param_dtype="float32",
+        attn_q_chunk=16, attn_k_chunk=16)

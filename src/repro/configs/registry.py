@@ -1,0 +1,38 @@
+"""``--arch <id>`` resolution for the 10 assigned architectures."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS: Dict[str, str] = {
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {list(ARCHS)}")
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {list(ARCHS)}")
+    # smoke tests run single-device tiny batches: no grad accumulation
+    return importlib.import_module(ARCHS[arch]).smoke().with_updates(
+        microbatch=1)

@@ -1,0 +1,20 @@
+"""rwkv6-7b — RWKV-6 "Finch": attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf]  32L d_model=4096 d_ff=14336 vocab=65536.
+Head size 64 (64 heads of 64).  Linear recurrence -> O(1)-state decode,
+so ``long_500k`` runs (DESIGN.md §6).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm", mixer="rwkv6",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=14_336, vocab_size=65_536, ssm_state=64,
+    ffn="rwkv", pos="none",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_updates(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=256, ssm_state=16,
+        dtype="float32", param_dtype="float32", ssm_chunk=16)

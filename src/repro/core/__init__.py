@@ -1,0 +1,13 @@
+"""repro.core — HOT SAX Time discord search (paper's contribution).
+
+Layers:
+  * windows / distance / sax   — shared primitives (Eq. 1/2/3, PAA, SAX)
+  * serial/                    — paper-faithful counted implementations
+  * hst_jax / matrix_profile   — TPU-native blocked JAX implementations
+  * distributed                — shard_map multi-pod discord search
+  * api.find_discords          — single entrypoint
+"""
+from .api import find_discords
+from .result import DiscordResult
+
+__all__ = ["find_discords", "DiscordResult"]

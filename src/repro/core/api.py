@@ -1,0 +1,60 @@
+"""Public discord-search entrypoint.
+
+``find_discords`` dispatches between the paper-faithful serial
+implementations (exact call counting — the reproduction plane) and the
+TPU-native JAX implementations (the performance plane).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .result import DiscordResult
+
+_SERIAL = ("brute", "hotsax", "hst", "dadd", "rra")
+_JAX = ("hst_jax", "matrix_profile", "distributed")
+
+
+def find_discords(series: np.ndarray, s: int, k: int = 1, *,
+                  method: str = "hst", P: int = 4, alpha: int = 4,
+                  seed: int = 0, r: Optional[float] = None,
+                  znorm: bool = True, **kw) -> DiscordResult:
+    """Find the top-k discords of a 1-D series.
+
+    method:
+      serial (counted, paper-faithful): brute | hotsax | hst | dadd | rra
+      jax (TPU-native, blocked):        hst_jax | matrix_profile
+
+    ``znorm=False`` switches to raw Euclidean windows (DADD's
+    convention, paper Sec 4.4) — used by the telemetry monitor where
+    magnitude carries the signal (brute | hst only).
+    """
+    series = np.asarray(series, dtype=np.float64)
+    if method == "brute":
+        from .serial import brute_force
+        return brute_force(series, s, k, znorm=znorm)
+    if method == "hotsax":
+        from .serial import hotsax
+        return hotsax(series, s, k, P=P, alpha=alpha, seed=seed)
+    if method == "hst":
+        from .serial import hst
+        return hst(series, s, k, P=P, alpha=alpha, seed=seed,
+                   znorm=znorm)
+    if method == "dadd":
+        from .serial import dadd
+        from .serial.dadd import pick_r_by_sampling
+        rr = r if r is not None else 0.99 * pick_r_by_sampling(
+            series, s, k, seed=seed)
+        return dadd(series, s, k, r=rr, seed=seed)
+    if method == "rra":
+        from .serial import rra
+        return rra(series, s, k, P=P, alpha=alpha, seed=seed)
+    if method == "hst_jax":
+        from .hst_jax import hst_jax
+        return hst_jax(series, s, k, P=P, alpha=alpha, seed=seed, **kw)
+    if method == "matrix_profile":
+        from .matrix_profile import discords_via_matrix_profile
+        return discords_via_matrix_profile(series, s, k, **kw)
+    raise ValueError(
+        f"unknown method {method!r}; pick one of {_SERIAL + _JAX}")

@@ -1,0 +1,118 @@
+"""Z-normalized Euclidean distance between sequences.
+
+Three equivalent formulations from the paper (Sec 2.1):
+  Eq. (1): explicit distance between pre-z-normalized copies,
+  Eq. (2): on-the-fly normalization with stored (mu, sigma),
+  Eq. (3): scalar-product form
+           d(k,l) = sqrt( 2 s (1 - (k.l - s mu_k mu_l) / (s sigma_k sigma_l)) )
+which is the MXU-friendly one: a block of pairwise distances is a matmul
+plus a rank-1 correction.  All production code paths use Eq. (3); Eq. (1)
+and (2) are kept as oracles and property-tested for equivalence.
+
+`DistanceCounter` wraps a series and exposes `d(i, j)` exactly like the
+paper's Fortran `distance()` subroutine, counting calls — the paper's
+primary speed metric (Tables 1-6 count these calls).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .windows import num_sequences, sliding_stats, windows_view, znorm_windows
+
+
+def dist_eq1(zwin: np.ndarray, k: int, l: int) -> float:
+    """Eq. (1) on pre-z-normalized windows."""
+    diff = zwin[k] - zwin[l]
+    return float(np.sqrt(np.dot(diff, diff)))
+
+
+def dist_eq2(win: np.ndarray, mu: np.ndarray, sigma: np.ndarray,
+             k: int, l: int) -> float:
+    """Eq. (2): normalize on the fly."""
+    a = (win[k] - mu[k]) / sigma[k]
+    b = (win[l] - mu[l]) / sigma[l]
+    diff = a - b
+    return float(np.sqrt(np.dot(diff, diff)))
+
+
+def dist_eq3(win: np.ndarray, mu: np.ndarray, sigma: np.ndarray,
+             s: int, k: int, l: int) -> float:
+    """Eq. (3): scalar-product form (what the hot loop uses)."""
+    dot = float(np.dot(win[k], win[l]))
+    corr = (dot - s * mu[k] * mu[l]) / (s * sigma[k] * sigma[l])
+    d2 = 2.0 * s * (1.0 - corr)
+    return float(np.sqrt(max(d2, 0.0)))
+
+
+class DistanceCounter:
+    """Counted access to pairwise z-normalized distances of one series.
+
+    Mirrors the paper's instrumentation: every `d()` call increments
+    `calls`.  Self-matches raise - algorithms must never request them
+    (the paper never calls distance on overlapping sequences).
+    """
+
+    __slots__ = ("series", "s", "n", "win", "mu", "sigma", "calls",
+                 "_inv_s_sigma", "znorm", "_ssq")
+
+    def __init__(self, series: np.ndarray, s: int, *, znorm: bool = True):
+        series = np.asarray(series, dtype=np.float64)
+        self.series = series
+        self.s = int(s)
+        self.n = num_sequences(series.shape[0], s)
+        self.win = windows_view(series, s)[: self.n]
+        self.znorm = znorm
+        if znorm:
+            self.mu, self.sigma = sliding_stats(series, s)
+        else:
+            # raw Euclidean mode (DADD's convention, paper Sec 4.4;
+            # telemetry uses it because level/magnitude carries signal
+            # that per-window normalization destroys)
+            self.mu = np.zeros(self.n)
+            self.sigma = np.ones(self.n)
+            self._ssq = np.einsum("ij,ij->i", self.win, self.win)
+        self._inv_s_sigma = 1.0 / (self.s * self.sigma)
+        self.calls = 0
+
+    def d(self, i: int, j: int) -> float:
+        if abs(i - j) < self.s:
+            raise ValueError(f"self-match distance requested: ({i},{j}), s={self.s}")
+        self.calls += 1
+        dot = float(np.dot(self.win[i], self.win[j]))
+        if not self.znorm:
+            d2 = self._ssq[i] + self._ssq[j] - 2.0 * dot
+            return float(np.sqrt(d2)) if d2 > 0.0 else 0.0
+        corr = (dot - self.s * self.mu[i] * self.mu[j]) \
+            * self._inv_s_sigma[i] * self.sigma[j] ** -1
+        d2 = 2.0 * self.s * (1.0 - corr)
+        return float(np.sqrt(d2)) if d2 > 0.0 else 0.0
+
+    def d_block(self, i: int, js: np.ndarray) -> np.ndarray:
+        """Distances from sequence i to an index array js (no self-matches).
+
+        Counts len(js) calls — the work is identical to that many serial
+        calls; vectorization is an implementation detail, not a change of
+        the algorithm's cost model.
+        """
+        js = np.asarray(js, dtype=np.int64)
+        if js.size == 0:
+            return np.empty(0)
+        if np.any(np.abs(js - i) < self.s):
+            raise ValueError("self-match in d_block")
+        self.calls += int(js.size)
+        dots = self.win[js] @ self.win[i]
+        if not self.znorm:
+            d2 = self._ssq[i] + self._ssq[js] - 2.0 * dots
+            return np.sqrt(np.maximum(d2, 0.0))
+        corr = (dots - self.s * self.mu[i] * self.mu[js]) \
+            / (self.s * self.sigma[i] * self.sigma[js])
+        d2 = 2.0 * self.s * (1.0 - corr)
+        return np.sqrt(np.maximum(d2, 0.0))
+
+    # -- oracles (uncounted; tests only) ------------------------------
+    def oracle_eq1(self, i: int, j: int) -> float:
+        z = znorm_windows(self.series, self.s)
+        return dist_eq1(z, i, j)
+
+    def oracle_eq2(self, i: int, j: int) -> float:
+        return dist_eq2(self.win, self.mu, self.sigma, i, j)

@@ -1,0 +1,373 @@
+"""TPU-native blocked HOT SAX Time.
+
+The paper's algorithm re-expressed for a systolic-array machine
+(DESIGN.md §3).  Same four pillars, different work granularity:
+
+  warm-up            -> one batched chained-distance pass (lax.map chunks)
+  short-range topo   -> vectorized d(i±1, ngh(i)±1) passes, scatter-min
+  external loop      -> lax.while_loop; candidate = argmax of the
+                        current upper-bound profile (a *continuous*
+                        version of the paper's dynamic re-sort: we
+                        re-sort implicitly at every step)
+  inner loop         -> top-B candidates verified TOGETHER, sweeping
+                        (B x block) MXU tiles with block-granular early
+                        abandoning (alive lanes masked out)
+  long-range topo    -> batched d(i±j, ngh(i)±j), j=1..s, scatter-min
+
+Everything is an upper-bound-preserving transformation, so exactness is
+inherited from the same argument as the serial algorithm: a discord is
+returned only when every other sequence's upper bound is below it.
+
+Work accounting: `pair_work` counts computed distance *lanes* (tile area
+actually swept), the blocked analogue of the paper's distance calls;
+`tiles` counts MXU tile launches.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .result import DiscordResult
+
+NND_INIT = jnp.float32(3.4e38)
+CHUNK = 8192          # pair-distance chunking for lax.map
+
+
+# ----------------------------------------------------------------------
+# primitives
+# ----------------------------------------------------------------------
+def _stats(series, s: int):
+    x = series.astype(jnp.float32)
+    n = x.shape[0] - s + 1
+    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
+    csum2 = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x * x)])
+    mu = (csum[s:s + n] - csum[:n]) / s
+    var = jnp.maximum((csum2[s:s + n] - csum2[:n]) / s - mu * mu, 0.0)
+    return mu, jnp.maximum(jnp.sqrt(var), 1e-10)
+
+
+def _gather_windows(series_pad, ids, s: int):
+    """(B, s) windows at arbitrary (clipped) ids."""
+    idx = ids[:, None] + jnp.arange(s)[None, :]
+    return series_pad[idx]
+
+
+def _pair_d2_chunk(series_pad, mu_pad, sig_pad, s: int, a, b, valid):
+    """Row-wise squared distance for index pairs (a, b); invalid -> +inf."""
+    a_ = jnp.clip(a, 0)
+    b_ = jnp.clip(b, 0)
+    wa = _gather_windows(series_pad, a_, s)
+    wb = _gather_windows(series_pad, b_, s)
+    dots = jnp.sum(wa * wb, axis=1)
+    corr = (dots - s * mu_pad[a_] * mu_pad[b_]) / (
+        s * sig_pad[a_] * sig_pad[b_])
+    d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+    return jnp.where(valid, d2, jnp.inf)
+
+
+def _pair_d2(series_pad, mu_pad, sig_pad, s: int, a, b, valid):
+    """Chunked pair distances (bounded memory for big batches)."""
+    n = a.shape[0]
+    if n <= CHUNK:
+        return _pair_d2_chunk(series_pad, mu_pad, sig_pad, s, a, b, valid)
+    pad = (-n) % CHUNK
+    a_p = jnp.pad(a, (0, pad))
+    b_p = jnp.pad(b, (0, pad))
+    v_p = jnp.pad(valid, (0, pad))
+    out = lax.map(
+        lambda abv: _pair_d2_chunk(series_pad, mu_pad, sig_pad, s, *abv),
+        (a_p.reshape(-1, CHUNK), b_p.reshape(-1, CHUNK),
+         v_p.reshape(-1, CHUNK)))
+    return out.reshape(-1)[:n]
+
+
+def _scatter_min(nnd, ngh, idx, d, src):
+    """nnd[idx] = min(nnd[idx], d); ngh follows the winning updates."""
+    n = nnd.shape[0]
+    safe = jnp.clip(idx, 0, n - 1)
+    live = (idx >= 0) & (idx < n) & jnp.isfinite(d)
+    tgt = jnp.where(live, safe, n)              # sentinel row n
+    nnd_ext = jnp.append(nnd, NND_INIT)
+    nnd_new = nnd_ext.at[tgt].min(d)[:n]
+    won = live & (d <= nnd_new[safe])
+    ngh_ext = jnp.append(ngh, jnp.int32(-1))
+    ngh_new = ngh_ext.at[jnp.where(won, safe, n)].set(src)[:n]
+    return nnd_new, ngh_new
+
+
+def _cluster_sizes(words):
+    """Per-sequence SAX cluster population (jnp, sort-based)."""
+    n = words.shape[0]
+    order = jnp.argsort(words)
+    sw = words[order]
+    new_grp = jnp.concatenate([jnp.ones(1, jnp.int32),
+                               (sw[1:] != sw[:-1]).astype(jnp.int32)])
+    grp = jnp.cumsum(new_grp) - 1
+    counts = jax.ops.segment_sum(jnp.ones(n, jnp.int32), grp,
+                                 num_segments=n)
+    sizes_sorted = counts[grp]
+    return jnp.zeros(n, jnp.int32).at[order].set(sizes_sorted)
+
+
+def _smooth(nnd, s: int):
+    """Eq. (6) centered moving average (s+1 window), raw at borders."""
+    half = s // 2
+    width = 2 * half + 1
+    n = nnd.shape[0]
+    csum = jnp.concatenate([jnp.zeros(1, nnd.dtype), jnp.cumsum(nnd)])
+    core = (csum[width:] - csum[:-width]) / width      # (n-width+1,)
+    out = nnd
+    if n - width + 1 > 0:
+        out = lax.dynamic_update_slice(out, core, (half,))
+    return out
+
+
+# ----------------------------------------------------------------------
+# phases
+# ----------------------------------------------------------------------
+def _warm_up(series_pad, mu_pad, sig_pad, s, n, words, sizes, key):
+    """Chain distances along (cluster-size, word, shuffle) order."""
+    rand = jax.random.uniform(key, (n,))
+    chain = jnp.lexsort((rand, words, sizes))
+    a, b = chain[:-1], chain[1:]
+    valid = jnp.abs(a - b) >= s
+    d2 = _pair_d2(series_pad, mu_pad, sig_pad, s, a, b, valid)
+    d = jnp.sqrt(d2)
+    nnd = jnp.full(n, NND_INIT)
+    ngh = jnp.full(n, -1, jnp.int32)
+    nnd, ngh = _scatter_min(nnd, ngh, a, d, b)
+    nnd, ngh = _scatter_min(nnd, ngh, b, d, a)
+    return nnd, ngh
+
+
+def _short_range(series_pad, mu_pad, sig_pad, s, n, nnd, ngh,
+                 passes: int = 2):
+    """Vectorized CNP passes: d(i±1, ngh(i)±1) for all i at once."""
+    i = jnp.arange(n)
+    for _ in range(passes):
+        for step in (+1, -1):
+            q = i + step
+            t = ngh + step
+            valid = ((ngh >= 0) & (q >= 0) & (q < n) & (t >= 0) & (t < n)
+                     & (jnp.abs(q - t) >= s))
+            valid &= jnp.where((q >= 0) & (q < n),
+                               ngh[jnp.clip(q, 0, n - 1)] != t, False)
+            d = jnp.sqrt(_pair_d2(series_pad, mu_pad, sig_pad, s,
+                                  q, t, valid))
+            nnd, ngh = _scatter_min(nnd, ngh, q, d, t)
+            nnd, ngh = _scatter_min(nnd, ngh, t, d, q)
+    return nnd, ngh
+
+
+def _long_range(series_pad, mu_pad, sig_pad, s, n, nnd, ngh, cand_ids):
+    """Batched peak leveling around each candidate (Sec 3.6)."""
+    offs = jnp.concatenate([jnp.arange(1, s + 1), -jnp.arange(1, s + 1)])
+    base_n = ngh[jnp.clip(cand_ids, 0, n - 1)]
+    q = (cand_ids[:, None] + offs[None, :]).reshape(-1)
+    t = (base_n[:, None] + offs[None, :]).reshape(-1)
+    ok_c = ((cand_ids >= 0)[:, None] & (base_n >= 0)[:, None])
+    valid = (ok_c.repeat(offs.shape[0], 1).reshape(-1)
+             & (q >= 0) & (q < n) & (t >= 0) & (t < n)
+             & (jnp.abs(q - t) >= s))
+    d = jnp.sqrt(_pair_d2(series_pad, mu_pad, sig_pad, s, q, t, valid))
+    return _scatter_min(nnd, ngh, q, d, t)
+
+
+# ----------------------------------------------------------------------
+# batched verification sweep
+# ----------------------------------------------------------------------
+def _make_verify(series_pad, mu_pad, sig_pad, s, n, block):
+    nb = -(-n // block)
+
+    def tile(qwin, qmu, qsig, qids, c0):
+        buf = lax.dynamic_slice(series_pad, (c0,), (block + s - 1,))
+        cwin = buf[jnp.arange(block)[:, None] + jnp.arange(s)[None, :]]
+        cmu = lax.dynamic_slice(mu_pad, (c0,), (block,))
+        csig = lax.dynamic_slice(sig_pad, (c0,), (block,))
+        dots = qwin @ cwin.T
+        corr = (dots - s * qmu[:, None] * cmu[None, :]) / (
+            s * qsig[:, None] * csig[None, :])
+        d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+        cid = c0 + jnp.arange(block)
+        bad = (jnp.abs(qids[:, None] - cid[None, :]) < s) \
+            | (cid[None, :] >= n)
+        return jnp.where(bad, jnp.inf, d2), cid
+
+    def verify(cand_ids, cand_nnd, best, nnd, ngh, work):
+        """Sweep all candidate blocks for a batch; block-level abandon.
+
+        Returns (exact_nnd (B,), exact_ngh (B,), survived (B,), nnd, ngh,
+        work) — survivors' values are exact.
+        """
+        qids = jnp.clip(cand_ids, 0, n - 1)
+        qwin = _gather_windows(series_pad, qids, s)
+        qmu, qsig = mu_pad[qids], sig_pad[qids]
+        B = cand_ids.shape[0]
+        cur = cand_nnd                       # upper bounds to start
+        cur_ngh = ngh[qids]
+        alive = (cand_ids >= 0) & (cur >= best)
+
+        def body(state):
+            blk, cur, cur_ngh, alive, nnd, ngh, work = state
+            d2, cid = tile(qwin, qmu, qsig, qids, blk * block)
+            d = jnp.sqrt(d2)
+            # row mins -> candidates
+            row_min = jnp.min(d, axis=1)
+            row_arg = cid[jnp.argmin(d, axis=1)]
+            upd = alive & (row_min < cur)
+            cur = jnp.where(upd, row_min, cur)
+            cur_ngh = jnp.where(upd, row_arg, cur_ngh)
+            # col mins -> global profile refresh (Sec 3.2, free here)
+            alive_col = jnp.where(alive[:, None], d, jnp.inf)
+            col_min = jnp.min(alive_col, axis=0)
+            col_arg = qids[jnp.argmin(alive_col, axis=0)]
+            nnd, ngh = _scatter_min(nnd, ngh, cid, col_min, col_arg)
+            work = work + jnp.sum(alive).astype(jnp.float32) * block
+            alive = alive & (cur >= best)
+            return blk + 1, cur, cur_ngh, alive, nnd, ngh, work
+
+        def cond(state):
+            blk, _, _, alive, _, _, _ = state
+            return (blk < nb) & jnp.any(alive)
+
+        blk, cur, cur_ngh, alive, nnd, ngh, work = lax.while_loop(
+            cond, body, (jnp.int32(0), cur, cur_ngh, alive, nnd, ngh,
+                         work))
+        survived = alive & (blk >= nb)       # swept everything while alive
+        return cur, cur_ngh, survived, nnd, ngh, work
+
+    return verify
+
+
+# ----------------------------------------------------------------------
+# driver
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("s", "k", "P", "alpha", "block",
+                                    "batch", "use_long_range"))
+def _hst_jax_impl(series, words, key, *, s, k, P, alpha, block, batch,
+                  use_long_range):
+    n = series.shape[0] - s + 1
+    mu, sig = _stats(series, s)
+    nb = -(-n // block)
+    # pad so every dynamic slice stays in bounds
+    L_need = nb * block + s - 1
+    series_pad = jnp.pad(series.astype(jnp.float32),
+                         (0, max(0, L_need - series.shape[0])))
+    mu_pad = jnp.pad(mu, (0, nb * block - n))
+    sig_pad = jnp.pad(sig, (0, nb * block - n), constant_values=1.0)
+
+    sizes = _cluster_sizes(words)
+    nnd, ngh = _warm_up(series_pad, mu_pad, sig_pad, s, n, words, sizes,
+                        key)
+    nnd, ngh = _short_range(series_pad, mu_pad, sig_pad, s, n, nnd, ngh)
+    smoothed = _smooth(nnd, s)
+    verify = _make_verify(series_pad, mu_pad, sig_pad, s, n, block)
+
+    active = jnp.ones(n, bool)
+    verified = jnp.zeros(n, bool)
+    disc_pos = jnp.full(k, -1, jnp.int32)
+    disc_val = jnp.zeros(k, jnp.float32)
+    idx = jnp.arange(n)
+
+    # phase 0's first selection uses the smoothed profile (Sec 3.5.1);
+    # afterwards the raw upper bounds — taking argmax every iteration is
+    # the continuous limit of the paper's re-sort (Sec 3.5.2)
+    def phase(ph, carry):
+        nnd, ngh, active, verified, disc_pos, disc_val, work, first = carry
+
+        def cond(st):
+            return ~st[6]
+
+        def body(st):
+            nnd, ngh, verified, best, best_loc, work, done, first = st
+            sel_prof = jnp.where(first, smoothed, nnd)
+            # pick top-`batch` active unverified candidates
+            cand_vals = jnp.where(active & ~verified, sel_prof, -jnp.inf)
+            cv, cand_ids = lax.top_k(cand_vals, batch)
+            cand_ids = jnp.where(jnp.isfinite(cv), cand_ids,
+                                 jnp.int32(-1))
+            exact, exact_ngh, survived, nnd2, ngh2, work2 = verify(
+                cand_ids, nnd[jnp.clip(cand_ids, 0, n - 1)], best,
+                nnd, ngh, work)
+            safe_ids = jnp.clip(cand_ids, 0, n - 1)
+            live = cand_ids >= 0
+            # fold improved (possibly exact) values back into the profile
+            nnd2, ngh2 = _scatter_min(
+                nnd2, ngh2, jnp.where(live, safe_ids, -1), exact,
+                exact_ngh)
+            ver_ext = jnp.append(verified, False)
+            verified2 = ver_ext.at[jnp.where(live & survived, safe_ids,
+                                             n)].set(True)[:n]
+            # long-range peak leveling around the batch (Sec 3.6)
+            if use_long_range:
+                nnd2, ngh2 = _long_range(series_pad, mu_pad, sig_pad, s,
+                                         n, nnd2, ngh2,
+                                         jnp.where(live, safe_ids, -1))
+                work2 = work2 + jnp.float32(2 * s) * jnp.sum(live)
+            # best-so-far from this batch's survivors
+            surv_vals = jnp.where(live & survived, exact, -jnp.inf)
+            sb = jnp.argmax(surv_vals)
+            new_best = jnp.where(surv_vals[sb] > best, surv_vals[sb],
+                                 best)
+            new_loc = jnp.where(surv_vals[sb] > best, cand_ids[sb],
+                                best_loc)
+            # termination on the POST-update profile: if the argmax of
+            # the active raw upper bounds is verified, it is the discord;
+            # if it cannot beat best, best_loc is the discord.
+            raw_vals = jnp.where(active, nnd2, -jnp.inf)
+            rtop = jnp.argmax(raw_vals)
+            fin_ver = verified2[rtop] & (raw_vals[rtop] >= new_best)
+            fin_bound = raw_vals[rtop] <= new_best
+            best2 = jnp.where(fin_ver, nnd2[rtop], new_best)
+            loc2 = jnp.where(fin_ver, rtop, new_loc)
+            done2 = fin_ver | fin_bound
+            return (nnd2, ngh2, verified2, best2, loc2, work2, done2,
+                    jnp.array(False))
+
+        nnd, ngh, verified, best, best_loc, work, _, first = \
+            lax.while_loop(cond, body,
+                           (nnd, ngh, verified, jnp.float32(0.0),
+                            jnp.int32(-1), work, jnp.array(False), first))
+        disc_pos = disc_pos.at[ph].set(best_loc)
+        disc_val = disc_val.at[ph].set(best)
+        active = active & (jnp.abs(idx - best_loc) >= s)
+        return (nnd, ngh, active, verified, disc_pos, disc_val, work,
+                first)
+
+    carry = (nnd, ngh, active, verified, disc_pos, disc_val,
+             jnp.float32(3 * n), jnp.array(True))
+    carry = lax.fori_loop(0, k, phase, carry)
+    _, _, _, _, disc_pos, disc_val, work, _ = carry
+    return disc_pos, disc_val, work
+
+
+def hst_jax(series, s: int, k: int = 1, *, P: int = 4, alpha: int = 4,
+            seed: int = 0, block: int = 512, batch: int = 8,
+            use_long_range: bool = True) -> DiscordResult:
+    """TPU-native blocked HST.  Exact discords, block-granular work."""
+    t0 = time.perf_counter()
+    series = jnp.asarray(np.asarray(series), jnp.float32)
+    from .sax import sax_words                     # float64 SAX (host)
+    words = jnp.asarray(sax_words(np.asarray(series, np.float64), s, P,
+                                  alpha))
+    n_seq = series.shape[0] - s + 1
+    batch = max(1, min(batch, n_seq))
+    block = min(block, max(128, n_seq))
+    key = jax.random.PRNGKey(seed)
+    pos, val, work = _hst_jax_impl(
+        series, words, key, s=s, k=k, P=P, alpha=alpha, block=block,
+        batch=batch, use_long_range=use_long_range)
+    pos = np.asarray(pos)
+    val = np.asarray(val)
+    n = series.shape[0] - s + 1
+    return DiscordResult(positions=pos.tolist(), nnds=val.tolist(),
+                         calls=int(work), n=n, s=s, method="hst_jax",
+                         runtime_s=time.perf_counter() - t0,
+                         extra={"block": block, "batch": batch})

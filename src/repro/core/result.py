@@ -1,0 +1,37 @@
+"""Common result container for every discord-search implementation."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass
+class DiscordResult:
+    """Outcome of a k-discord search.
+
+    ``calls`` is the number of distance-function invocations — the
+    paper's primary cost metric.  ``cps`` (Sec 4.2) = calls / (N * k).
+    """
+    positions: List[int]
+    nnds: List[float]
+    calls: int
+    n: int                      # number of sequences N
+    s: int                      # sequence length
+    method: str = "?"
+    runtime_s: float = 0.0
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def k(self) -> int:
+        return len(self.positions)
+
+    @property
+    def cps(self) -> float:
+        return self.calls / (self.n * max(self.k, 1))
+
+    def __repr__(self) -> str:  # compact, bench-friendly
+        pos = ",".join(map(str, self.positions))
+        nnd = ",".join(f"{v:.4f}" for v in self.nnds)
+        return (f"DiscordResult({self.method}: pos=[{pos}] nnd=[{nnd}] "
+                f"calls={self.calls} cps={self.cps:.2f} "
+                f"t={self.runtime_s:.3f}s)")

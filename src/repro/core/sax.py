@@ -1,0 +1,82 @@
+"""Symbolic Aggregate approXimation (SAX), Lin et al. 2003.
+
+Each length-``s`` sequence is z-normalized, reduced to ``P`` PAA segment
+means, and each mean is digitized against the ``alpha``-quantile
+breakpoints of N(0,1).  Sequences sharing a word form a *SAX cluster* —
+the pruning structure both HOT SAX and HST are built on.
+
+The paper's code requires ``P | s`` (Table 6 caption); we enforce the
+same.  Words are packed into int64 keys (``alpha <= 64``, ``P <= 10``
+always holds for the paper's parameter ranges).
+"""
+from __future__ import annotations
+
+from statistics import NormalDist
+from typing import Dict
+
+import numpy as np
+
+from .windows import num_sequences, sliding_stats
+
+
+def gaussian_breakpoints(alpha: int) -> np.ndarray:
+    """alpha-1 breakpoints splitting N(0,1) into equiprobable bins."""
+    if alpha < 2:
+        raise ValueError("alphabet size must be >= 2")
+    nd = NormalDist()
+    return np.array([nd.inv_cdf(i / alpha) for i in range(1, alpha)])
+
+
+def paa(series: np.ndarray, s: int, P: int) -> np.ndarray:
+    """(N, P) PAA of every z-normalized window, via cumulative sums."""
+    if s % P != 0:
+        raise ValueError(f"P={P} must divide s={s} (paper's convention)")
+    x = np.asarray(series, dtype=np.float64)
+    n = num_sequences(x.shape[0], s)
+    w = s // P
+    csum = np.concatenate([[0.0], np.cumsum(x)])
+    starts = np.arange(n)[:, None] + np.arange(P)[None, :] * w
+    seg_means = (csum[starts + w] - csum[starts]) / w
+    mu, sigma = sliding_stats(x, s)
+    return (seg_means - mu[:, None]) / sigma[:, None]
+
+
+def sax_words(series: np.ndarray, s: int, P: int, alpha: int) -> np.ndarray:
+    """(N,) packed int64 SAX word per sequence."""
+    pa = paa(series, s, P)
+    bp = gaussian_breakpoints(alpha)
+    digits = np.searchsorted(bp, pa)          # (N, P) in [0, alpha)
+    keys = np.zeros(pa.shape[0], dtype=np.int64)
+    for j in range(digits.shape[1]):
+        keys = keys * alpha + digits[:, j]
+    return keys
+
+
+class SaxTable:
+    """Cluster table: word -> member indices, plus per-sequence sizes."""
+
+    def __init__(self, series: np.ndarray, s: int, P: int, alpha: int):
+        self.s, self.P, self.alpha = s, P, alpha
+        self.words = sax_words(series, s, P, alpha)
+        self.n = self.words.shape[0]
+        order = np.argsort(self.words, kind="stable")
+        sorted_words = self.words[order]
+        boundaries = np.flatnonzero(
+            np.diff(sorted_words, prepend=sorted_words[0] - 1))
+        self.clusters: Dict[int, np.ndarray] = {}
+        bounds = np.append(boundaries, self.n)
+        for b0, b1 in zip(bounds[:-1], bounds[1:]):
+            self.clusters[int(sorted_words[b0])] = order[b0:b1]
+        sizes = np.empty(self.n, dtype=np.int64)
+        for wkey, members in self.clusters.items():
+            sizes[members] = members.size
+        self.cluster_size = sizes                     # per sequence
+        # clusters ordered smallest -> largest (ties by word key: stable)
+        self.keys_by_size = sorted(
+            self.clusters, key=lambda k: (self.clusters[k].size, k))
+
+    def members(self, word_key: int) -> np.ndarray:
+        return self.clusters[int(word_key)]
+
+    def word_of(self, i: int) -> int:
+        return int(self.words[i])

@@ -1,0 +1,14 @@
+"""Paper-faithful serial discord algorithms (numpy, counted distance calls).
+
+These are the *reproduction* plane: call-for-call equivalents of the
+paper's Fortran implementations, used to validate the paper's tables.
+The TPU-native implementations live in ``repro.core.hst_jax`` /
+``repro.core.matrix_profile`` / ``repro.core.distributed``.
+"""
+from .brute import brute_force, exact_nnd_profile
+from .hotsax import hotsax
+from .hst import hst
+from .dadd import dadd
+from .rra import rra
+
+__all__ = ["brute_force", "exact_nnd_profile", "hotsax", "hst", "dadd", "rra"]

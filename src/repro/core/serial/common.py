@@ -1,0 +1,87 @@
+"""Shared helpers for the serial algorithms.
+
+The single most important one is :func:`scan_abandon`: it reproduces the
+*serial* early-abandoning inner loop (one distance call at a time, stop
+as soon as the running nnd drops strictly below the best-so-far) while
+doing the arithmetic as one vectorized block.  Only the calls that the
+serial algorithm would actually have made are counted and only their
+results are applied — the cost model is bit-identical to a Fortran loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from ..distance import DistanceCounter
+from ..result import DiscordResult
+
+
+class CountedSeries(DistanceCounter):
+    """DistanceCounter + an uncounted bulk path for scan_abandon."""
+
+    def d_block_raw(self, i: int, js: np.ndarray) -> np.ndarray:
+        dots = self.win[js] @ self.win[i]
+        if not self.znorm:
+            d2 = self._ssq[i] + self._ssq[js] - 2.0 * dots
+            return np.sqrt(np.maximum(d2, 0.0))
+        corr = (dots - self.s * self.mu[i] * self.mu[js]) \
+            / (self.s * self.sigma[i] * self.sigma[js])
+        d2 = 2.0 * self.s * (1.0 - corr)
+        return np.sqrt(np.maximum(d2, 0.0))
+
+
+def non_self_match(js: np.ndarray, i: int, s: int) -> np.ndarray:
+    return js[np.abs(js - i) >= s]
+
+
+def scan_abandon(ctx: CountedSeries, i: int, js: np.ndarray,
+                 nn: float, best: float) -> Tuple[float, np.ndarray, np.ndarray, bool]:
+    """Serial-faithful early-abandoning scan of ``d(i, js[0]), d(i, js[1]) ...``.
+
+    Starts the running nearest-neighbor value at ``nn``; aborts right
+    after the first call that takes it strictly below ``best``.
+
+    Returns ``(nn_out, used_js, used_dists, abandoned)`` where ``used_*``
+    cover exactly the calls that were made (and counted).
+    """
+    if js.size == 0:
+        return nn, js, np.empty(0), False
+    dists = ctx.d_block_raw(i, js)
+    run = np.minimum.accumulate(np.minimum(dists, nn))
+    below = run < best
+    if below.any():
+        t = int(np.argmax(below))          # first position that abandons
+        used = t + 1
+        abandoned = True
+    else:
+        used = int(js.size)
+        abandoned = False
+    ctx.calls += used
+    return float(run[used - 1]), js[:used], dists[:used], abandoned
+
+
+def extract_topk_from_profile(nnd: np.ndarray, k: int, s: int
+                              ) -> Tuple[List[int], List[float]]:
+    """Greedy top-k non-overlapping maxima of an exact nnd profile."""
+    nnd = nnd.copy()
+    pos, vals = [], []
+    for _ in range(k):
+        i = int(np.argmax(nnd))
+        if not np.isfinite(nnd[i]) or nnd[i] < 0:
+            break
+        pos.append(i)
+        vals.append(float(nnd[i]))
+        lo, hi = max(0, i - s + 1), min(nnd.shape[0], i + s)
+        nnd[lo:hi] = -np.inf
+    return pos, vals
+
+
+def timed_result(method: str, t0: float, positions, nnds, ctx: CountedSeries,
+                 **extra) -> DiscordResult:
+    return DiscordResult(positions=list(map(int, positions)),
+                         nnds=list(map(float, nnds)),
+                         calls=int(ctx.calls), n=ctx.n, s=ctx.s,
+                         method=method, runtime_s=time.perf_counter() - t0,
+                         extra=extra)

@@ -1,0 +1,67 @@
+"""HOT SAX (Keogh, Lin, Fu 2005) — the paper's benchmark baseline.
+
+Faithful to the original heuristic (paper Sec 2.4):
+  * outer loop: sequences of the smallest SAX clusters first, the rest
+    in pseudo-random order;
+  * inner loop: same-cluster members first, then all the others in
+    pseudo-random order; early abandon as soon as the running nnd of the
+    outer candidate drops strictly below the best-so-far;
+  * k-th discord: full restart with non-overlap exclusion (no nnd
+    memory — that refinement belongs to Bu et al. 2007 and to HST).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..result import DiscordResult
+from ..sax import SaxTable
+from .common import CountedSeries, non_self_match, scan_abandon
+
+
+def _outer_order(table: SaxTable, rng: np.random.Generator) -> np.ndarray:
+    perm = rng.permutation(table.n)
+    # stable sort of the shuffled order by cluster size: small clusters
+    # first, ties broken by the shuffle
+    return perm[np.argsort(table.cluster_size[perm], kind="stable")]
+
+
+def hotsax(series: np.ndarray, s: int, k: int = 1, *, P: int = 4,
+           alpha: int = 4, seed: int = 0) -> DiscordResult:
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    ctx = CountedSeries(series, s)
+    n = ctx.n
+    table = SaxTable(series, s, P, alpha)
+    # one pre-shuffled order reused for "pseudo-random" inner scans
+    global_perm = rng.permutation(n)
+    cluster_shuffled = {w: rng.permutation(m)
+                        for w, m in table.clusters.items()}
+
+    found_pos, found_nnd = [], []
+    for _ in range(k):
+        best, best_loc = 0.0, -1
+        outer = _outer_order(table, rng)
+        for i in outer:
+            i = int(i)
+            if any(abs(i - p) < s for p in found_pos):
+                continue
+            nn = np.inf
+            abandoned = False
+            # 1) same-cluster first
+            same = non_self_match(cluster_shuffled[table.word_of(i)], i, s)
+            nn, _, _, abandoned = scan_abandon(ctx, i, same, nn, best)
+            # 2) everything else, pseudo-random
+            if not abandoned:
+                rest = global_perm[
+                    (table.words[global_perm] != table.words[i])]
+                rest = non_self_match(rest, i, s)
+                nn, _, _, abandoned = scan_abandon(ctx, i, rest, nn, best)
+            if not abandoned and np.isfinite(nn) and nn > best:
+                best, best_loc = float(nn), i
+        found_pos.append(best_loc)
+        found_nnd.append(best)
+    return DiscordResult(positions=found_pos, nnds=found_nnd,
+                         calls=ctx.calls, n=n, s=s, method="hotsax",
+                         runtime_s=time.perf_counter() - t0)

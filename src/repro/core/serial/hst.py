@@ -1,0 +1,208 @@
+"""HOT SAX Time (HST) — the paper's contribution, faithful serial form.
+
+Implements Listing 2 end to end:
+  1. nnd[] initialized high, ngh[] invalid;
+  2. SAX clustering;
+  3. Warm-up (Sec 3.3): shuffle, group clusters smallest->largest, chain
+     distance calls along the new order (both endpoints refreshed);
+  4. Short-range time topology (Sec 3.4): d(i+1, ngh(i)+1) forward pass
+     and d(i-1, ngh(i)-1) backward pass;
+  5. External loop ordered by the (s+1)-moving-average-smoothed nnd
+     profile (Sec 3.5.1, Eq. 6), re-sorted by raw approximate nnds every
+     time a good discord candidate is confirmed (Sec 3.5.2);
+  6. Inner loop = HOT SAX's (current cluster, then remaining clusters
+     smallest->largest) with strict early abandoning, *refreshing the
+     nnd of both endpoints of every call* (Sec 3.2);
+  7. Long-range time topology (Sec 3.6, Listing 1) after every external
+     step, both directions;
+  8. k-th discord (Sec 3.2): the approximate nnd profile persists, so
+     Avoid_low_nnds prunes most of the later searches.
+
+Every distance call is counted exactly as the Fortran code would.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from ..result import DiscordResult
+from ..sax import SaxTable
+from ..windows import moving_average_centered
+from .common import CountedSeries, non_self_match, scan_abandon
+
+NND_INIT = 99999999.9   # paper Listing 2, line 1
+NGH_NONE = -1
+
+
+class _HstState:
+    """Mutable search state shared across the k discord searches."""
+
+    def __init__(self, ctx: CountedSeries, table: SaxTable,
+                 rng: np.random.Generator):
+        self.ctx = ctx
+        self.table = table
+        self.rng = rng
+        self.n = ctx.n
+        self.s = ctx.s
+        self.nnd = np.full(self.n, NND_INIT)
+        self.ngh = np.full(self.n, NGH_NONE, dtype=np.int64)
+        self.cluster_shuffled: Dict[int, np.ndarray] = {
+            w: rng.permutation(m) for w, m in table.clusters.items()}
+
+    # -- pairwise refresh (Sec 3.2: both endpoints) --------------------
+    def _refresh(self, a: int, b: int, d: float) -> None:
+        if d < self.nnd[a]:
+            self.nnd[a] = d
+            self.ngh[a] = b
+        if d < self.nnd[b]:
+            self.nnd[b] = d
+            self.ngh[b] = a
+
+    def _refresh_block(self, i: int, js: np.ndarray, ds: np.ndarray) -> None:
+        if js.size == 0:
+            return
+        dmin = float(ds.min())
+        if dmin < self.nnd[i]:
+            self.nnd[i] = dmin
+            self.ngh[i] = int(js[int(np.argmin(ds))])
+        upd = ds < self.nnd[js]
+        self.nnd[js[upd]] = ds[upd]
+        self.ngh[js[upd]] = i
+
+    # -- Sec 3.3 -------------------------------------------------------
+    def warm_up(self) -> None:
+        perm = self.rng.permutation(self.n)
+        rank = np.empty(self.n, dtype=np.int64)
+        rank[perm] = np.arange(self.n)
+        chain: List[int] = []
+        for key in self.table.keys_by_size:
+            members = self.table.clusters[key]
+            chain.extend(members[np.argsort(rank[members], kind="stable")])
+        for a, b in zip(chain[:-1], chain[1:]):
+            a, b = int(a), int(b)
+            if abs(a - b) >= self.s:
+                d = self.ctx.d(a, b)
+                self._refresh(a, b, d)
+
+    # -- Sec 3.4 -------------------------------------------------------
+    def short_range_time_topology(self) -> None:
+        n, s = self.n, self.s
+        for i in range(n - 1):                     # forward pass
+            t = int(self.ngh[i]) + 1
+            j = i + 1
+            if self.ngh[i] == NGH_NONE or t >= n:
+                continue
+            if self.ngh[j] == t or abs(j - t) < s:
+                continue
+            d = self.ctx.d(j, t)
+            self._refresh(j, t, d)
+        for i in range(n - 1, 0, -1):              # backward pass
+            t = int(self.ngh[i]) - 1
+            j = i - 1
+            if self.ngh[i] == NGH_NONE or t < 0:
+                continue
+            if self.ngh[j] == t or abs(j - t) < s:
+                continue
+            d = self.ctx.d(j, t)
+            self._refresh(j, t, d)
+
+    # -- HOT SAX inner loop, nnd-refreshing (Sec 3.7) -------------------
+    def current_cluster(self, i: int, best: float) -> bool:
+        """Returns can_be_discord after scanning i's own cluster."""
+        js = non_self_match(
+            self.cluster_shuffled[self.table.word_of(i)], i, self.s)
+        nn, used_js, used_ds, abandoned = scan_abandon(
+            self.ctx, i, js, float(self.nnd[i]), best)
+        self._refresh_block(i, used_js, used_ds)
+        return not abandoned
+
+    def other_clusters(self, i: int, best: float) -> bool:
+        own = self.table.word_of(i)
+        for key in self.table.keys_by_size:
+            if key == own:
+                continue
+            js = non_self_match(self.cluster_shuffled[key], i, self.s)
+            nn, used_js, used_ds, abandoned = scan_abandon(
+                self.ctx, i, js, float(self.nnd[i]), best)
+            self._refresh_block(i, used_js, used_ds)
+            if abandoned:
+                return False
+        return True
+
+    # -- Sec 3.6, Listing 1 ---------------------------------------------
+    def _long_range(self, i: int, best: float, step: int) -> None:
+        base_ngh = int(self.ngh[i])
+        if base_ngh == NGH_NONE:
+            return
+        for j in range(1, self.s + 1):
+            q = i + step * j
+            t = base_ngh + step * j
+            if q < 0 or q >= self.n or t < 0 or t >= self.n:
+                return                              # outside limits (l. 4-5)
+            if self.nnd[q] < best:
+                return                              # not a discord (l. 2)
+            if self.ngh[q] == t:
+                return                              # already calculated (l. 3)
+            d = self.ctx.d(q, t)                    # |q-t| == |i-ngh(i)| >= s
+            if d < self.nnd[q]:
+                self.nnd[q] = d                     # update distance (l. 10)
+                self.ngh[q] = t                     # update neighbor (l. 11)
+            else:
+                return                              # no improvement (l. 12)
+
+    def long_range_forw(self, i: int, best: float) -> None:
+        self._long_range(i, best, +1)
+
+    def long_range_back(self, i: int, best: float) -> None:
+        self._long_range(i, best, -1)
+
+
+def hst(series: np.ndarray, s: int, k: int = 1, *, P: int = 4,
+        alpha: int = 4, seed: int = 0, znorm: bool = True) -> DiscordResult:
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    ctx = CountedSeries(series, s, znorm=znorm)
+    table = SaxTable(series, s, P, alpha)
+    st = _HstState(ctx, table, rng)
+
+    st.warm_up()
+    st.short_range_time_topology()
+    smoothed = moving_average_centered(st.nnd, s)
+
+    found_pos: List[int] = []
+    found_nnd: List[float] = []
+    for disc in range(k):
+        best, best_loc = 0.0, -1
+        if disc == 0:
+            order = list(np.argsort(-smoothed, kind="stable"))
+        else:
+            order = list(np.argsort(-st.nnd, kind="stable"))
+        pos = 0
+        while pos < len(order):
+            i = int(order[pos])
+            pos += 1
+            if any(abs(i - p) < s for p in found_pos):
+                continue
+            can = st.nnd[i] >= best                 # Avoid_low_nnds
+            if can:
+                can = st.current_cluster(i, best)
+            if can:
+                can = st.other_clusters(i, best)
+            st.long_range_forw(i, best)             # level peaks
+            st.long_range_back(i, best)
+            if can:
+                best = float(st.nnd[i])             # exact now
+                best_loc = i
+                rest = np.array(order[pos:], dtype=np.int64)
+                if rest.size:                       # Sort_Remaining_Ext
+                    order[pos:] = list(
+                        rest[np.argsort(-st.nnd[rest], kind="stable")])
+        found_pos.append(best_loc)
+        found_nnd.append(best)
+
+    return DiscordResult(positions=found_pos, nnds=found_nnd,
+                         calls=ctx.calls, n=ctx.n, s=s, method="hst",
+                         runtime_s=time.perf_counter() - t0,
+                         extra={"warmup_like_calls": 2 * ctx.n})

@@ -1,0 +1,88 @@
+"""Sliding-window primitives shared by every discord algorithm.
+
+Terminology follows the paper (Sec. 2.1):
+  * a *sequence* of length ``s`` starting at time ``k`` is
+    ``p_k .. p_{k+s-1}``;
+  * a series with ``N_tot`` points has ``N = N_tot - s + 1`` sequences;
+  * distances are between z-normalized sequences; the *non-self-match*
+    condition requires ``|i - j| >= s``.
+
+Numerical note: z-normalization is undefined for constant windows
+(sigma == 0).  We clamp sigma to ``SIGMA_FLOOR`` everywhere (serial refs,
+jnp oracle, Pallas kernels) so all implementations agree bit-for-bit on
+that convention.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SIGMA_FLOOR = 1e-10
+
+
+def num_sequences(n_points: int, s: int) -> int:
+    """N = N_tot - s + 1 (paper Sec 2.1)."""
+    if s < 2:
+        raise ValueError(f"sequence length s must be >= 2, got {s}")
+    n = n_points - s + 1
+    if n < 2:
+        raise ValueError(
+            f"series of {n_points} points has {n} sequences of length {s}; "
+            "need at least 2")
+    return n
+
+
+def windows_view(series: np.ndarray, s: int) -> np.ndarray:
+    """Zero-copy (N, s) strided view of all sequences."""
+    series = np.ascontiguousarray(series)
+    return np.lib.stride_tricks.sliding_window_view(series, s)
+
+
+def sliding_stats(series: np.ndarray, s: int):
+    """Per-sequence mean and std (population), O(N) via cumulative sums.
+
+    Returns float64 arrays (mu, sigma) of length N; sigma clamped to
+    SIGMA_FLOOR.  Uses the two-pass-free cumsum formulation the paper
+    relies on for the Eq. (3) scalar-product distance.
+    """
+    x = np.asarray(series, dtype=np.float64)
+    n = num_sequences(x.shape[0], s)
+    csum = np.concatenate([[0.0], np.cumsum(x)])
+    csum2 = np.concatenate([[0.0], np.cumsum(x * x)])
+    winsum = csum[s:s + n] - csum[:n]
+    winsum2 = csum2[s:s + n] - csum2[:n]
+    mu = winsum / s
+    var = winsum2 / s - mu * mu
+    sigma = np.sqrt(np.maximum(var, 0.0))
+    return mu, np.maximum(sigma, SIGMA_FLOOR)
+
+
+def znorm_windows(series: np.ndarray, s: int) -> np.ndarray:
+    """Materialized (N, s) z-normalized windows — O(N*s) memory.
+
+    Only used by oracles/tests; the algorithms use Eq. (3) instead.
+    """
+    w = windows_view(np.asarray(series, dtype=np.float64), s)
+    mu, sigma = sliding_stats(series, s)
+    return (w - mu[:, None]) / sigma[:, None]
+
+
+def self_match(i, j, s: int):
+    """True when sequences i and j overlap (|i-j| < s)."""
+    return abs(i - j) < s
+
+
+def moving_average_centered(x: np.ndarray, s: int) -> np.ndarray:
+    """Paper Eq. (6): centered moving average over s+1 samples.
+
+    Borders (where the full window does not fit) keep the raw value.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    half = s // 2
+    width = 2 * half + 1
+    if x.shape[0] < width:
+        return x.copy()
+    kernel = np.full(width, 1.0 / width)
+    smooth = np.convolve(x, kernel, mode="same")
+    out = x.copy()
+    out[half:x.shape[0] - half] = smooth[half:x.shape[0] - half]
+    return out

@@ -1,0 +1,8 @@
+from .pipeline import ShardedTokenPipeline
+from .synth import synthetic_token_batches
+from .timeseries import (ecg_like, random_walk, sine_noise,
+                         with_implanted_anomalies)
+
+__all__ = ["ShardedTokenPipeline", "synthetic_token_batches",
+           "sine_noise", "random_walk", "ecg_like",
+           "with_implanted_anomalies"]

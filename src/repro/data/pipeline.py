@@ -1,0 +1,43 @@
+"""Host data pipeline: per-host sharding + background prefetch."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedTokenPipeline:
+    """Wraps a batch iterator with a daemon prefetch thread.
+
+    ``device_put_fn`` (optional) moves the host batch to sharded device
+    memory off the training thread's critical path.
+    """
+
+    def __init__(self, it: Iterator[dict], *, prefetch: int = 2,
+                 device_put_fn: Optional[Callable] = None):
+        self._it = it
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._put = device_put_fn or (lambda b: b)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for b in self._it:
+                self._q.put(self._put(b))
+        except BaseException as e:               # noqa: BLE001
+            self._err = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b = self._q.get()
+        if b is None:
+            raise (self._err or StopIteration)
+        return b

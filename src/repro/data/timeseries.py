@@ -1,0 +1,57 @@
+"""Synthetic time series for Plane A (paper validation).
+
+The paper's real datasets (ECG 300, Shuttle TEK, NPRS, ...) are not
+redistributable offline; these generators produce controlled analogues
+whose *structural* parameters (noise amplitude E of Eq. 7, anomaly
+count, regime changes) are the quantities the paper's claims are about.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sine_noise(n: int, *, E: float = 0.5, omega: float = 0.1,
+               seed: int = 0) -> np.ndarray:
+    """Paper Eq. (7): p_i = (sin(0.1 i) + E*eps + 1) / 2.5."""
+    rng = np.random.default_rng(seed)
+    i = np.arange(n)
+    return (np.sin(omega * i) + E * rng.uniform(size=n) + 1.0) / 2.5
+
+
+def random_walk(n: int, *, sigma: float = 1.0, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.normal(scale=sigma, size=n))
+
+
+def ecg_like(n: int, *, period: int = 180, noise: float = 0.03,
+             seed: int = 0) -> np.ndarray:
+    """Periodic spike train resembling an ECG lead (P-QRS-T-ish)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    phase = (t % period) / period
+    beat = (1.2 * np.exp(-((phase - 0.30) / 0.012) ** 2)      # R
+            - 0.3 * np.exp(-((phase - 0.26) / 0.02) ** 2)     # Q
+            - 0.25 * np.exp(-((phase - 0.34) / 0.02) ** 2)    # S
+            + 0.25 * np.exp(-((phase - 0.55) / 0.06) ** 2)    # T
+            + 0.12 * np.exp(-((phase - 0.12) / 0.05) ** 2))   # P
+    return beat + noise * rng.normal(size=n)
+
+
+def with_implanted_anomalies(x: np.ndarray, *, n_anomalies: int = 1,
+                             length: int = 64, amp: float = 1.0,
+                             seed: int = 0):
+    """Inject localized bumps; returns (series, positions)."""
+    rng = np.random.default_rng(seed + 1)
+    x = x.copy()
+    n = x.shape[0]
+    pos = []
+    for _ in range(n_anomalies):
+        for _try in range(100):
+            p = int(rng.integers(length, n - 2 * length))
+            if all(abs(p - q) > 4 * length for q in pos):
+                break
+        bump = amp * np.sin(np.linspace(0, np.pi, length)) \
+            * rng.choice([-1.0, 1.0])
+        x[p:p + length] += bump
+        pos.append(p)
+    return x, sorted(pos)

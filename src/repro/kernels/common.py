@@ -1,0 +1,59 @@
+"""Shared kernel utilities: padding, grid math, backend detection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x, multiple: int, axis: int = 0, value=0.0):
+    """Pad `x` along `axis` to the next multiple of `multiple`."""
+    n = x.shape[axis]
+    target = ceil_div(n, multiple) * multiple
+    if target == n:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - n)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels execute for real only on TPU; elsewhere interpret."""
+    return jax.default_backend() != "tpu"
+
+
+def sliding_stats_jnp(series, s: int):
+    """jnp twin of windows.sliding_stats (float32 path, clamped sigma)."""
+    x = jnp.asarray(series, dtype=jnp.float32)
+    n = x.shape[0] - s + 1
+    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
+    csum2 = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x * x)])
+    winsum = csum[s:s + n] - csum[:n]
+    winsum2 = csum2[s:s + n] - csum2[:n]
+    mu = winsum / s
+    var = jnp.maximum(winsum2 / s - mu * mu, 0.0)
+    sigma = jnp.maximum(jnp.sqrt(var), 1e-10)
+    return mu, sigma
+
+
+def windows_jnp(series, s: int):
+    """(N, s) materialized windows (oracle-side only)."""
+    x = jnp.asarray(series)
+    n = x.shape[0] - s + 1
+    idx = jnp.arange(n)[:, None] + jnp.arange(s)[None, :]
+    return x[idx]
+
+
+def znorm_d2_formula(dots, s, mu_q, sig_q, mu_c, sig_c):
+    """Eq. (3) squared distance from raw dot products (broadcasting)."""
+    corr = (dots - s * mu_q[:, None] * mu_c[None, :]) / (
+        s * sig_q[:, None] * sig_c[None, :])
+    return jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+
+
+def to_np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))

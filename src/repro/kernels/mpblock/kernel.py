@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: matrix-profile tiles with in-kernel window build.
+
+This is the HBM-optimal formulation of the paper's distance hot spot
+(DESIGN.md §3): instead of materializing the (N, s) window matrix —
+which multiplies HBM traffic by s — the *raw series chunk stays resident
+in VMEM* and each grid step builds its (s, block) Hankel tiles on the
+fly from ``s`` static shifted slices at a dynamic offset, then contracts
+them on the MXU.
+
+Upper-triangle scheduling: tile (i, j) is computed only for j >= i; each
+tile folds into BOTH the row accumulator (queries i) and the column
+accumulator (candidates j) — d(a,b) = d(b,a) — so the full profile is
+``min(row_out, col_out)`` at the host, with half the MXU work.
+
+VMEM budget: the series chunk + per-window stats are replicated per grid
+step; ops.py caps chunks at ~1M points (4 MB f32) and scans super-chunks
+for longer series.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = float("inf")
+
+
+def _hankel_T(series_ref, start, block: int, s: int):
+    """(s, block) tile:  out[t, b] = series[start + b + t].
+
+    ``s`` static shifted slices at dynamic offset `start` — lowerable on
+    TPU (dynamic-start, static-size) and a contiguous read pattern.
+    """
+    cols = [pl.load(series_ref, (pl.dslice(start + t, block),))
+            for t in range(s)]
+    return jnp.stack(cols, axis=0)
+
+
+def _mp_tile_kernel(series_ref, mu_ref, sig_ref,
+                    rmin_ref, rarg_ref, cmin_ref, carg_ref, *,
+                    s: int, block: int, n_valid: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == i)          # first visit of row block i (j starts at i)
+    def _init_row():
+        rmin_ref[...] = jnp.full((block,), BIG, jnp.float32)
+        rarg_ref[...] = jnp.zeros((block,), jnp.int32)
+
+    @pl.when(i == 0)          # first visit of col block j
+    def _init_col():
+        cmin_ref[...] = jnp.full((block,), BIG, jnp.float32)
+        carg_ref[...] = jnp.zeros((block,), jnp.int32)
+
+    @pl.when(j >= i)
+    def _compute():
+        q0 = i * block
+        c0 = j * block
+        qT = _hankel_T(series_ref, q0, block, s)        # (s, bq)
+        cT = _hankel_T(series_ref, c0, block, s)        # (s, bc)
+        dots = jax.lax.dot_general(
+            qT, cT, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, bc)
+        qmu = pl.load(mu_ref, (pl.dslice(q0, block),))
+        qsig = pl.load(sig_ref, (pl.dslice(q0, block),))
+        cmu = pl.load(mu_ref, (pl.dslice(c0, block),))
+        csig = pl.load(sig_ref, (pl.dslice(c0, block),))
+        corr = (dots - s * qmu[:, None] * cmu[None, :]) \
+            / (s * qsig[:, None] * csig[None, :])
+        d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+
+        qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+        cj = c0 + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+        bad = (jnp.abs(qi - cj) < s) | (cj >= n_valid) | (qi >= n_valid)
+        d2 = jnp.where(bad, BIG, d2)
+
+        row_min = jnp.min(d2, axis=1)
+        row_arg = (c0 + jnp.argmin(d2, axis=1)).astype(jnp.int32)
+        col_min = jnp.min(d2, axis=0)
+        col_arg = (q0 + jnp.argmin(d2, axis=0)).astype(jnp.int32)
+
+        cur = rmin_ref[...]
+        take = row_min < cur
+        rmin_ref[...] = jnp.where(take, row_min, cur)
+        rarg_ref[...] = jnp.where(take, row_arg, rarg_ref[...])
+
+        cur = cmin_ref[...]
+        take = col_min < cur
+        cmin_ref[...] = jnp.where(take, col_min, cur)
+        carg_ref[...] = jnp.where(take, col_arg, carg_ref[...])
+
+
+def mp_block_pallas(series_pad, mu_pad, sig_pad, *, s: int, n_valid: int,
+                    block: int = 128, interpret: bool = True):
+    """Matrix profile of one series chunk.
+
+    series_pad: (L,) f32, L >= n_blocks*block + s (window overhang).
+    mu/sig_pad: (n_blocks*block,) per-window stats.
+    Returns (row_min_d2, row_arg, col_min_d2, col_arg), each (n_pad,).
+    """
+    n_pad = mu_pad.shape[0]
+    assert n_pad % block == 0
+    nb = n_pad // block
+    grid = (nb, nb)
+    kernel = functools.partial(
+        _mp_tile_kernel, s=s, block=block, n_valid=n_valid)
+    L = series_pad.shape[0]
+    out_shape = (
+        jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L,), lambda i, j: (0,)),     # series resident
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),  # mu resident
+            pl.BlockSpec((n_pad,), lambda i, j: (0,)),  # sig resident
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(series_pad, mu_pad, sig_pad)

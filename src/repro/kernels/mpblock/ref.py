@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the mpblock kernel: full exact matrix profile."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import sliding_stats_jnp, windows_jnp, znorm_d2_formula
+
+
+def matrix_profile_ref(series, s: int):
+    """(min_d2, argmin) for every window — O(N^2) dense oracle."""
+    series = jnp.asarray(series, jnp.float32)
+    n = series.shape[0] - s + 1
+    win = windows_jnp(series, s)
+    mu, sig = sliding_stats_jnp(series, s)
+    d2 = znorm_d2_formula(win @ win.T, s, mu, sig, mu, sig)
+    ij = jnp.arange(n)
+    bad = jnp.abs(ij[:, None] - ij[None, :]) < s
+    d2 = jnp.where(bad, jnp.inf, d2)
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)

@@ -1,0 +1,44 @@
+"""Jit'd wrapper for the fused PAA+SAX kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.sax import gaussian_breakpoints
+from ..common import ceil_div, default_interpret, sliding_stats_jnp
+from .kernel import paa_sax_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s", "P", "alpha", "block", "interpret",
+                                    "breakpoints"))
+def _sax_jit(series, *, s, P, alpha, breakpoints, block, interpret):
+    x = jnp.asarray(series, jnp.float32)
+    n = x.shape[0] - s + 1
+    w = s // P
+    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
+    boxsum = csum[w:] - csum[:-w]                # boxsum[t] = sum x[t:t+w]
+    mu, sig = sliding_stats_jnp(x, s)
+    n_pad = ceil_div(n, block) * block
+    mu_p = jnp.pad(mu, (0, n_pad - n))
+    sig_p = jnp.pad(sig, (0, n_pad - n), constant_values=1.0)
+    L_need = n_pad + (P - 1) * w
+    box_p = jnp.pad(boxsum, (0, max(0, L_need - boxsum.shape[0])))
+    words = paa_sax_pallas(box_p, mu_p, sig_p, P=P, w=w, alpha=alpha,
+                           breakpoints=breakpoints, block=block,
+                           interpret=interpret)
+    return words[:n]
+
+
+def sax_words_op(series, s: int, P: int, alpha: int, *, block: int = 256,
+                 interpret: bool | None = None):
+    """Packed int32 SAX word per window, via the Pallas kernel."""
+    if s % P != 0:
+        raise ValueError(f"P={P} must divide s={s}")
+    if interpret is None:
+        interpret = default_interpret()
+    bp = tuple(float(b) for b in gaussian_breakpoints(alpha))
+    return _sax_jit(series, s=s, P=P, alpha=alpha, breakpoints=bp,
+                    block=block, interpret=interpret)

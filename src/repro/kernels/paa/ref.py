@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the PAA/SAX kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import sliding_stats_jnp
+
+
+def sax_words_ref(series, s: int, P: int, alpha: int, breakpoints):
+    """Packed int32 SAX word per window (jnp twin of core.sax.sax_words)."""
+    x = jnp.asarray(series, jnp.float32)
+    n = x.shape[0] - s + 1
+    w = s // P
+    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
+    starts = jnp.arange(n)[:, None] + jnp.arange(P)[None, :] * w
+    seg = (csum[starts + w] - csum[starts]) / w
+    mu, sig = sliding_stats_jnp(x, s)
+    val = (seg - mu[:, None]) / sig[:, None]
+    bp = jnp.asarray(breakpoints, jnp.float32)
+    digits = jnp.sum(val[:, :, None] > bp[None, None, :], axis=-1)
+    words = jnp.zeros((n,), jnp.int32)
+    for j in range(P):
+        words = words * alpha + digits[:, j].astype(jnp.int32)
+    return words

@@ -1,0 +1,61 @@
+"""Jit'd wrapper around the zdist Pallas kernel.
+
+Handles window materialization (gather), padding to MXU-aligned block
+multiples, and unpadding of results.  The HBM-optimal variant that keeps
+the raw series resident and builds windows in-kernel lives in
+``kernels/mpblock`` — see DESIGN.md §3 for the trade-off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import (ceil_div, default_interpret, pad_to,
+                      sliding_stats_jnp, windows_jnp)
+from .kernel import zdist_min_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_q", "block_c",
+                                             "interpret"))
+def _zdist_min_jit(series, query_ids, *, s, block_q, block_c, interpret):
+    series = jnp.asarray(series, jnp.float32)
+    n = series.shape[0] - s + 1
+    mu, sig = sliding_stats_jnp(series, s)
+    win = windows_jnp(series, s)                       # (N, s)
+
+    qids = jnp.asarray(query_ids, jnp.int32)
+    nq = qids.shape[0]
+    qids_p = pad_to(qids, block_q, value=jnp.int32(2 ** 30))
+    safe = qids_p.clip(0, n - 1)                       # gather-safe ids
+    qwin, qmu, qsig = win[safe], mu[safe], sig[safe]
+
+    cwin = pad_to(win, block_c, axis=0)
+    cmu = pad_to(mu, block_c, value=0.0)
+    csig = pad_to(sig, block_c, value=1.0)
+
+    # pad s to a lane multiple for MXU alignment (zeros don't change dots)
+    s_pad = max(128, ceil_div(s, 128) * 128)
+    qwin = pad_to(qwin, s_pad, axis=1)
+    cwin = pad_to(cwin, s_pad, axis=1)
+
+    d2, arg = zdist_min_pallas(
+        qids_p, qwin, qmu, qsig, cwin, cmu, csig,
+        s=s, n_valid=n, block_q=block_q, block_c=block_c,
+        interpret=interpret)
+    return d2[:nq], arg[:nq]
+
+
+def zdist_min(series, s: int, query_ids, *, block_q: int = 128,
+              block_c: int = 128, interpret: bool | None = None):
+    """Public op: (min z-norm distance, neighbor index) per query.
+
+    Returns (d, ngh): d is the *distance* (sqrt applied), matching the
+    serial reference convention.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    d2, arg = _zdist_min_jit(series, query_ids, s=s, block_q=block_q,
+                             block_c=block_c, interpret=interpret)
+    return jnp.sqrt(d2), arg

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the zdist kernel (materialized, unblocked)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import sliding_stats_jnp, windows_jnp, znorm_d2_formula
+
+
+def zdist_min_ref(series, s: int, query_ids):
+    """(min_d2, argmin) per query id over all non-self-match candidates."""
+    series = jnp.asarray(series, jnp.float32)
+    n = series.shape[0] - s + 1
+    win = windows_jnp(series, s)                       # (N, s)
+    mu, sig = sliding_stats_jnp(series, s)
+    qids = jnp.asarray(query_ids, jnp.int32)
+    dots = win[qids] @ win.T                           # (B, N)
+    d2 = znorm_d2_formula(dots, s, mu[qids], sig[qids], mu, sig)
+    cj = jnp.arange(n)[None, :]
+    bad = jnp.abs(qids[:, None] - cj) < s
+    d2 = jnp.where(bad, jnp.inf, d2)
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)

@@ -1,0 +1,55 @@
+"""Discord-search launcher (Plane A CLI).
+
+    python -m repro.launch.discord --method hst --n 20000 --s 120 -k 3
+    python -m repro.launch.discord --method drag --devices 8 ...
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.data import sine_noise, with_implanted_anomalies
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="hst",
+                    choices=["brute", "hotsax", "hst", "dadd", "rra",
+                             "hst_jax", "matrix_profile", "ring",
+                             "drag"])
+    ap.add_argument("--file", help="1-column text file of points")
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--E", type=float, default=0.5)
+    ap.add_argument("--anomalies", type=int, default=2)
+    ap.add_argument("--s", type=int, default=120)
+    ap.add_argument("-k", type=int, default=1)
+    ap.add_argument("--P", type=int, default=4)
+    ap.add_argument("--alpha", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.file:
+        x = np.loadtxt(args.file)
+    else:
+        x = sine_noise(args.n, E=args.E, seed=args.seed)
+        x, pos = with_implanted_anomalies(
+            x, n_anomalies=args.anomalies, length=args.s,
+            amp=0.8, seed=args.seed)
+        print(f"synthetic Eq.7 series, implanted at {pos}")
+
+    if args.method in ("ring", "drag"):
+        from repro.core.distributed import (distributed_discords,
+                                            drag_discords)
+        fn = distributed_discords if args.method == "ring" \
+            else drag_discords
+        res = fn(x, args.s, args.k)
+    else:
+        from repro.core import find_discords
+        res = find_discords(x, args.s, args.k, method=args.method,
+                            P=args.P, alpha=args.alpha, seed=args.seed)
+    print(res)
+
+
+if __name__ == "__main__":
+    main()

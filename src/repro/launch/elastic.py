@@ -1,0 +1,50 @@
+"""Elastic rescale: resume a checkpoint under a different device count.
+
+The checkpoint stores unsharded arrays (checkpoint/store.py); this
+module rebuilds shardings for whatever mesh the restarted job managed
+to assemble (lost a pod -> (data=8, model=16); gained one -> add the
+pod axis) and device_puts each leaf onto it.  The only invariants are
+the *logical* shapes, so any mesh whose axis sizes divide them works —
+``plan_rescale`` checks that and falls back to replication per dim via
+the same fit_spec rule the forward path uses.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.parallel import param_specs, shardings_for
+
+
+def plan_rescale(cfg: ModelConfig, n_devices: int,
+                 *, model_axis: int = 16) -> Tuple[Tuple[int, ...],
+                                                   Tuple[str, ...]]:
+    """Pick a mesh for the surviving device count."""
+    model = min(model_axis, n_devices)
+    while n_devices % model:
+        model //= 2
+    data = n_devices // model
+    return (data, model), ("data", "model")
+
+
+def reshard_state(state_tree, cfg: ModelConfig, mesh):
+    """Device_put a host-restored {params, opt} tree onto ``mesh``."""
+    p_spec = param_specs(state_tree["params"], cfg, mesh)
+    shard = shardings_for(p_spec, mesh)
+    out = dict(state_tree)
+    out["params"] = jax.tree_util.tree_map(
+        jax.device_put, state_tree["params"], shard)
+    if "opt" in state_tree:
+        mu_shard = shardings_for(
+            param_specs(state_tree["opt"]["mu"], cfg, mesh), mesh)
+        out["opt"] = {
+            "mu": jax.tree_util.tree_map(jax.device_put,
+                                         state_tree["opt"]["mu"], mu_shard),
+            "nu": jax.tree_util.tree_map(jax.device_put,
+                                         state_tree["opt"]["nu"], mu_shard),
+            "count": jax.device_put(state_tree["opt"]["count"]),
+        }
+    return out

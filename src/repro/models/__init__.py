@@ -1,0 +1,13 @@
+"""Model zoo: one polymorphic decoder covering all 10 assigned archs."""
+from .config import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, ModelConfig, ShapeConfig,
+                     cell_is_applicable, shape_by_name)
+from .lm import (decode_step, forward, init_cache, init_params, lm_loss,
+                 prefill)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "shape_by_name", "cell_is_applicable",
+    "init_params", "forward", "prefill", "decode_step", "init_cache",
+    "lm_loss",
+]

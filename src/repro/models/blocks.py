@@ -1,0 +1,242 @@
+"""One decoder block, polymorphic over the config's mixer/ffn kinds.
+
+A block is ``(params, hidden, cache) -> (hidden, cache, aux)`` in one of
+three modes:
+  * ``train``   — no cache in, no cache out (loss path);
+  * ``prefill`` — cache out (KV tensors / SSM states) for serving;
+  * ``decode``  — single-token step consuming + updating the cache.
+
+All layers of an arch share one structure, so the whole stack runs
+under a single ``lax.scan`` over stacked parameters (lm.py).
+
+Cache layout per mixer (leading L dim added by the stack):
+  attn   : k,v (B, S_cache, Kh, hd)
+  rwkv6  : wkv state (B, H, D, D) + token-shift tails (B, d) ×2
+  hymba  : SWA ring k,v (B, W, Kh, hd) + ring positions + mamba state
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.act_sharding import constrain
+
+from .config import ModelConfig
+from .layers import (apply_mrope, apply_rope, decode_attention, dense_init,
+                     ffn_apply, ffn_init, flash_attention, rms_norm)
+from .moe import moe_apply, moe_init
+from .ssm import (mamba_apply, mamba_init, rwkv_channel_mix,
+                  rwkv_channel_mix_init, rwkv_init, rwkv_time_mix)
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, H, Kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"w_q": dense_init(ks[0], (d, H * hd), dtype),
+         "w_k": dense_init(ks[1], (d, Kh * hd), dtype),
+         "w_v": dense_init(ks[2], (d, Kh * hd), dtype),
+         "w_o": dense_init(ks[3], (H * hd, d), dtype)}
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros(H * hd, dtype)
+        p["b_k"] = jnp.zeros(Kh * hd, dtype)
+        p["b_v"] = jnp.zeros(Kh * hd, dtype)
+    return p
+
+
+def block_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros(cfg.d_model, jnp.float32),
+         "ln2": jnp.zeros(cfg.d_model, jnp.float32)}
+    if cfg.mixer == "rwkv6":
+        p["tmix"] = rwkv_init(ks[0], cfg, dtype)
+        p["cmix"] = rwkv_channel_mix_init(ks[1], cfg, dtype)
+        return p
+    p["attn"] = attn_init(ks[0], cfg, dtype)
+    if cfg.mixer == "hymba":
+        p["mamba"] = mamba_init(ks[1], cfg, dtype)
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+    else:
+        p["ffn"] = ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn, dtype)
+    return p
+
+
+def empty_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Per-layer cache pytree (unstacked; lm.py stacks over L)."""
+    hd, Kh = cfg.hd, cfg.n_kv_heads
+    if cfg.mixer == "rwkv6":
+        D = cfg.ssm_state if cfg.ssm_state >= 16 else 64
+        H = cfg.d_model // D
+        return {"wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+                "tail_t": jnp.zeros((batch, cfg.d_model), dtype),
+                "tail_c": jnp.zeros((batch, cfg.d_model), dtype)}
+    S = min(max_len, cfg.window) if cfg.window else max_len
+    c = {"k": jnp.zeros((batch, S, Kh, hd), dtype),
+         "v": jnp.zeros((batch, S, Kh, hd), dtype)}
+    if cfg.window:
+        c["pos"] = jnp.full((batch, S), -1, jnp.int32)
+    if cfg.mixer == "hymba":
+        c["mamba"] = jnp.zeros((batch, cfg.d_model, cfg.ssm_state),
+                               jnp.float32)
+    return c
+
+
+# ----------------------------------------------------------------------
+# attention sub-block (shared by attn / hymba mixers)
+# ----------------------------------------------------------------------
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, T, _ = x.shape
+    H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q = q + p["b_q"]
+        k = k + p["b_k"]
+        v = v + p["b_v"]
+    q = constrain(q.reshape(B, T, H, hd), "dp", None, "tp", None)
+    k = constrain(k.reshape(B, T, Kh, hd), "dp", None, "tp", None)
+    v = constrain(v.reshape(B, T, Kh, hd), "dp", None, "tp", None)
+    return q, k, v
+
+
+def _attn_train(p, x, positions, cfg: ModelConfig):
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, window=cfg.window,
+                        q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    B, T = x.shape[:2]
+    return o.reshape(B, T, -1) @ p["w_o"], (k, v)
+
+
+def _attn_decode(p, x, positions, cache, cur_len, cfg: ModelConfig):
+    """x (B,1,d); returns (out, new k/v cache entries)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = (cur_len % S) if cfg.window else cur_len
+    zero = jnp.zeros((), slot.dtype) if hasattr(slot, "dtype") else 0
+    k_new = lax.dynamic_update_slice(cache["k"], k, (zero, slot, zero, zero))
+    v_new = lax.dynamic_update_slice(cache["v"], v, (zero, slot, zero, zero))
+    if cfg.window:
+        pos_new = cache["pos"].at[:, slot].set(cur_len)
+        # SWA ring: mask by stored absolute positions
+        ok = (pos_new >= 0) & (pos_new > cur_len - cfg.window) \
+            & (pos_new <= cur_len)
+        s = jnp.einsum("bkgd,bskd->bkgs",
+                       q.reshape(B, cfg.n_kv_heads, cfg.q_rep, cfg.hd),
+                       k_new, preferred_element_type=jnp.float32) \
+            * cfg.hd ** -0.5
+        s = jnp.where(ok[:, None, None, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(v_new.dtype), v_new)
+        o = o.reshape(B, 1, -1)
+        upd = {"k": k_new, "v": v_new, "pos": pos_new}
+    else:
+        o = decode_attention(q, k_new, v_new, cur_len + 1)
+        o = o.reshape(B, 1, -1)
+        upd = {"k": k_new, "v": v_new}
+    return o.astype(x.dtype) @ p["w_o"], upd
+
+
+# ----------------------------------------------------------------------
+# the block
+# ----------------------------------------------------------------------
+def block_apply(p, x, positions, cfg: ModelConfig, *, mode: str = "train",
+                cache: Optional[dict] = None, cur_len=None):
+    """Returns (x_out, new_cache_or_None, aux_dict)."""
+    aux = {}
+    # SP mode: the residual stream lives hidden-sharded; re-gather it
+    # in bf16 BEFORE the norm's f32 cast (gathering after the cast
+    # doubles the bytes on the wire — measured, §Perf it. 8)
+    if cfg.act_shard_hidden and mode != "decode":
+        x = constrain(x, "dp", None, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+
+    if cfg.mixer == "rwkv6":
+        if mode == "decode":
+            mix_out, S, tail_t = rwkv_time_mix(
+                p["tmix"], h, cfg, state=cache["wkv"],
+                last_tok=cache["tail_t"])
+        else:
+            mix_out, S, tail_t = rwkv_time_mix(p["tmix"], h, cfg)
+        x = x + mix_out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if mode == "decode":
+            cm, tail_c = rwkv_channel_mix(p["cmix"], h2,
+                                          last_tok=cache["tail_c"])
+        else:
+            cm, tail_c = rwkv_channel_mix(p["cmix"], h2)
+        x = x + cm
+        new_cache = None if mode == "train" else \
+            {"wkv": S, "tail_t": tail_t, "tail_c": tail_c}
+        return x, new_cache, aux
+
+    # ---- attention (+ parallel mamba for hymba) -----------------------
+    if mode == "decode":
+        attn_out, kv_upd = _attn_decode(p["attn"], h, positions, cache,
+                                        cur_len, cfg)
+    else:
+        attn_out, (k, v) = _attn_train(p["attn"], h, positions, cfg)
+        kv_upd = None
+        if mode == "prefill":
+            kv_upd = {"k": k, "v": v}
+            if cfg.window:
+                kv_upd = _swa_prefill_cache(k, v, cfg.window)
+
+    if cfg.mixer == "hymba":
+        m_state = cache["mamba"] if mode == "decode" else None
+        mamba_out, m_new = mamba_apply(p["mamba"], h, cfg, state=m_state)
+        mix_out = 0.5 * (attn_out + mamba_out)
+        if kv_upd is not None or mode == "prefill":
+            kv_upd = dict(kv_upd or {})
+            kv_upd["mamba"] = m_new
+    else:
+        mix_out = attn_out
+    res = "tp" if cfg.act_shard_hidden else None
+    x = constrain(x + mix_out, "dp", None, res)
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ffn_out, moe_aux = moe_apply(p["moe"], h2, cfg)
+        aux.update(moe_aux)
+    else:
+        ffn_out = ffn_apply(p["ffn"], h2, cfg.ffn)
+    x = constrain(x + ffn_out, "dp", None, res)
+    return x, kv_upd, aux
+
+
+def _swa_prefill_cache(k, v, W: int):
+    """Pack the trailing window of a prefill into the SWA ring.
+
+    Decode writes position p at slot p % W; the prefill tail positions
+    are scattered to the same convention so decode can continue the
+    ring seamlessly.
+    """
+    B, T, Kh, hd = k.shape
+    lo = max(T - W, 0)
+    tail_pos = jnp.arange(lo, T)                       # (Wt,)
+    slots = tail_pos % W
+    k_c = jnp.zeros((B, W, Kh, hd), k.dtype).at[:, slots].set(k[:, lo:])
+    v_c = jnp.zeros((B, W, Kh, hd), v.dtype).at[:, slots].set(v[:, lo:])
+    pos = jnp.full((W,), -1, jnp.int32).at[slots].set(
+        tail_pos.astype(jnp.int32))
+    return {"k": k_c, "v": v_c,
+            "pos": jnp.broadcast_to(pos[None], (B, W))}

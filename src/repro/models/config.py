@@ -1,0 +1,177 @@
+"""Architecture configuration — one dataclass covers all 10 assigned archs.
+
+Every field is static (hashable) so configs can parameterize jitted
+functions.  ``registry.py`` maps ``--arch <id>`` to instances built in
+``repro/configs/<id>.py`` (exact public-literature numbers) and to
+reduced smoke variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                 # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+
+    # sequence mixer
+    mixer: str = "attn"          # attn | rwkv6 | hymba (attn ∥ mamba)
+    window: int = 0              # sliding-window size; 0 = full attention
+    ssm_state: int = 0           # SSM state dim (mamba / rwkv head size)
+
+    # feed-forward
+    ffn: str = "swiglu"          # swiglu | gelu
+    n_experts: int = 0           # 0 = dense FFN
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0    # moonlight keeps shared experts
+
+    # embeddings / positions
+    pos: str = "rope"            # rope | mrope | none
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    frontend: str = "none"       # none | audio | vision  (stub embeds)
+    frontend_len: int = 0        # prefix length provided by the frontend
+
+    # numerics
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"      # activations/compute
+    param_dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 256
+
+    # training-time knobs (hillclimbed; see EXPERIMENTS.md §Perf)
+    remat: str = "dots"          # none | dots | full
+    scan_layers: bool = True
+    act_shard_hidden: bool = False   # SP-style: shard d_model of the
+    # inter-block activations over "model" (16x smaller layer-scan
+    # residuals for one extra all-gather/reduce-scatter pair per block)
+    fsdp_blocks: bool = False    # shard block weights over BOTH mesh
+    # axes (ZeRO-3) instead of 2-D TP: trades the per-layer TP
+    # activation all-reduce (∝ B·T·d) for per-layer weight gathers
+    # (∝ P_layer) — wins when tokens/chip >> params/layer
+    attn_q_chunk: int = 512
+    attn_k_chunk: int = 1024
+    ssm_chunk: int = 128
+    microbatch: int = 8          # gradient-accumulation factor
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def q_rep(self) -> int:
+        """GQA group size (query heads per kv head)."""
+        return max(self.n_heads // max(self.n_kv_heads, 1), 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.mixer == "rwkv6"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when long-context decode is feasible (SSM/hybrid/SWA)."""
+        return self.mixer in ("rwkv6", "hymba") or self.window > 0
+
+    # -- parameter counts (drive MODEL_FLOPS = 6·N·D in the roofline) ---
+    def _mixer_params(self) -> Tuple[int, int]:
+        """(total, active) parameters of one layer's sequence mixer."""
+        d, hd = self.d_model, self.hd
+        if self.mixer == "rwkv6":
+            # r,k,v,g,o projections + decay/mix loras (small)
+            p = 5 * d * d + 2 * d * 64 + 6 * d
+            return p, p
+        qkv = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+        out = self.n_heads * hd * d
+        p = qkv + out
+        if self.qkv_bias:
+            p += (self.n_heads + 2 * self.n_kv_heads) * hd
+        if self.mixer == "hymba":            # parallel mamba branch
+            n = self.ssm_state
+            p += 2 * d * d + d * (2 * n + 1) + d * n + 2 * d  # in/out/B,C,dt,A,D
+        return p, p
+
+    def _ffn_params(self) -> Tuple[int, int]:
+        d, f = self.d_model, self.d_ff
+        per_expert = 3 * d * f if self.ffn == "swiglu" else 2 * d * f
+        if self.n_experts == 0:
+            return per_expert, per_expert
+        router = d * self.n_experts
+        tot = self.n_experts * per_expert + router \
+            + self.n_shared_experts * per_expert
+        act = self.top_k * per_expert + router \
+            + self.n_shared_experts * per_expert
+        return tot, act
+
+    def param_counts(self) -> Tuple[int, int]:
+        """(total, active) params, embeddings included once."""
+        mix_t, mix_a = self._mixer_params()
+        ffn_t, ffn_a = self._ffn_params()
+        norms = 2 * self.d_model * self.n_layers + self.d_model
+        emb = self.padded_vocab * self.d_model
+        head = 0 if self.tie_embeddings else emb
+        tot = self.n_layers * (mix_t + ffn_t) + norms + emb + head
+        act = self.n_layers * (mix_a + ffn_a) + norms + emb + head
+        return tot, act
+
+    def with_updates(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assignment."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for sh in ALL_SHAPES:
+        if sh.name == name:
+            return sh
+    raise KeyError(f"unknown shape {name!r}; have "
+                   f"{[s.name for s in ALL_SHAPES]}")
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason.
+
+    ``long_500k`` needs sub-quadratic attention — skipped for pure
+    full-attention archs per the assignment (DESIGN.md §6).
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full O(L^2) attention cannot decode at 524288 context; "
+                "skipped per assignment (sub-quadratic archs only)")
+    return None

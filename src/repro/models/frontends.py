@@ -1,0 +1,69 @@
+"""Modality frontend STUBS (per the assignment).
+
+``[audio]`` / ``[vlm]`` entries specify the transformer backbone only;
+the EnCodec encoder (musicgen) and the ViT patch encoder (qwen2-vl) are
+out of scope.  ``input_specs()`` therefore provides *precomputed*
+frame/patch embeddings — ShapeDtypeStructs for the dry-run, synthetic
+tensors for smoke tests — which ``lm.forward`` consumes as a sequence
+prefix (``prefix_embeds``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+# prefix fraction of the sequence provided by the frontend stub
+FRONTEND_FRAC = {"audio": 1 / 8, "vision": 1 / 4}
+
+
+def frontend_prefix_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend == "none":
+        return 0
+    frac = FRONTEND_FRAC[cfg.frontend]
+    return max(16, int(seq_len * frac)) if seq_len >= 128 else 4
+
+
+def frontend_embed_struct(cfg: ModelConfig, batch: int, seq_len: int):
+    """ShapeDtypeStruct stand-in for the precomputed embeddings."""
+    P = frontend_prefix_len(cfg, seq_len)
+    if P == 0:
+        return None
+    return jax.ShapeDtypeStruct((batch, P, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+
+
+def synth_frontend_embeds(key, cfg: ModelConfig, batch: int, seq_len: int):
+    """Concrete synthetic embeddings for smoke tests / examples."""
+    P = frontend_prefix_len(cfg, seq_len)
+    if P == 0:
+        return None
+    return 0.02 * jax.random.normal(key, (batch, P, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, seq_len: int,
+                    prefix_len: int = 0, grid_hw: int = 0):
+    """(B, 3, T) positions for M-RoPE.
+
+    Vision-patch prefix tokens get 2-D (h, w) indices over a square
+    grid with a constant temporal index; text tokens get equal t/h/w
+    running indices (which reduces M-RoPE to 1-D RoPE — tested).
+    """
+    T = seq_len
+    t = jnp.arange(T, dtype=jnp.int32)
+    pos = jnp.stack([t, t, t])                          # (3, T)
+    if prefix_len > 0:
+        g = grid_hw or max(1, int(prefix_len ** 0.5))
+        i = jnp.arange(prefix_len, dtype=jnp.int32)
+        hh, ww = i // g, i % g
+        pos = pos.at[0, :prefix_len].set(0)
+        pos = pos.at[1, :prefix_len].set(hh)
+        pos = pos.at[2, :prefix_len].set(ww)
+        # text continues after the max spatial index (Qwen2-VL rule)
+        off = jnp.int32(g)
+        text = jnp.arange(T - prefix_len, dtype=jnp.int32) + off
+        for ax in range(3):
+            pos = pos.at[ax, prefix_len:].set(text)
+    return jnp.broadcast_to(pos[None], (batch, 3, T))

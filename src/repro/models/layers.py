@@ -1,0 +1,319 @@
+"""Shared neural layers: RMSNorm, RoPE / M-RoPE, GQA flash attention, MLP.
+
+Design rules (apply to every layer in this package):
+  * pure functions over plain dict pytrees — no module framework;
+  * activations compute in ``cfg.dtype`` with float32 softmax/norm
+    accumulation (matches production TPU numerics);
+  * attention is *chunked* (online-softmax flash form, `lax.scan` over
+    KV blocks inside a scan over Q blocks) so the 32k-prefill cells
+    compile with O(q_chunk · k_chunk) score memory instead of O(S²);
+  * GQA is native: queries are grouped as (B, T, Kh, G, hd) and scores
+    contract per kv-head, so no K/V repetition is materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# norm + init
+# ----------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = (xf * lax.rsqrt(var + eps)).astype(dt)
+    # scale applied AFTER the downcast: the matmul-facing tensor (and
+    # its cotangent, which carries the TP partial-sum all-reduce) stays
+    # bf16 — reducing in f32 doubles the dominant collective's bytes
+    # (measured 512 MiB -> 256 MiB per layer AR; §Perf it. 9)
+    return out * (1.0 + scale).astype(dt)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (production default)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------
+def _rope_cos_sin(positions, hd: int, theta: float):
+    """positions (..., T) -> cos/sin (..., T, hd//2), float32."""
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x (B, T, H, hd), positions (B, T) -> rotated x (same dtype)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_cos_sin(positions, hd, theta)       # (B, T, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0,
+                sections=(0.25, 0.25, 0.5)):
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions3`` (B, 3, T) carries (temporal, height, width) indices;
+    the rotary frequency bands are split between the three streams
+    (paper's 16/24/24 split of hd/2=64 for hd=128 ≈ the section ratios
+    here).  Text tokens carry identical t/h/w indices, which makes
+    M-RoPE degenerate to 1-D RoPE exactly — property-tested.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    n_t = int(half * sections[0])
+    n_h = int(half * sections[1])
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    # per-frequency-band stream selector: first n_t bands follow the
+    # temporal index, next n_h the height index, the rest the width
+    stream = jnp.concatenate([jnp.zeros(n_t, jnp.int32),
+                              jnp.ones(n_h, jnp.int32),
+                              jnp.full(half - n_t - n_h, 2, jnp.int32)])
+    p_sel = positions3.astype(jnp.float32).transpose(0, 2, 1)  # (B, T, 3)
+    p_band = jnp.take(p_sel, stream, axis=-1)                  # (B, T, half)
+    ang = p_band * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# flash (chunked online-softmax) attention, GQA-native, custom VJP
+# ----------------------------------------------------------------------
+# The forward saves only (out, logsumexp) per query — O(T) residuals —
+# and the backward re-derives every (q_chunk x k_chunk) probability tile
+# from them (the FlashAttention-2 recipe).  Without this, scan-of-tiles
+# autodiff stores O(T·S) score residuals per layer and the 32k/4k train
+# cells blow past HBM (measured 230 GB/device on internlm2 train_4k; see
+# EXPERIMENTS.md §Perf iteration 0).
+
+
+def _mask_tile(q_pos, kv_pos, causal: bool, window: int):
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        ok &= q_pos[:, None] - kv_pos[None, :] < window
+    return ok
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, qc, kc):
+    B, T, H, hd = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = hd ** -0.5
+    nq, nk = T // qc, S // kc
+
+    qg = q.reshape(B, T, Kh, G, hd)
+
+    def q_block(iq):
+        q_pos = iq * qc + jnp.arange(qc) + q_offset
+        qb = lax.dynamic_slice_in_dim(qg, iq * qc, qc, axis=1)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kb = lax.dynamic_slice_in_dim(k, ik * kc, kc, axis=1)
+            vb = lax.dynamic_slice_in_dim(v, ik * kc, kc, axis=1)
+            kv_pos = ik * kc + jnp.arange(kc)
+            s = jnp.einsum("btkgd,bskd->bkgts", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            ok = _mask_tile(q_pos, kv_pos, causal, window)
+            s = jnp.where(ok[None, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgts,bskd->bkgtd", p.astype(qb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kh, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Kh, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))              # (B,Kh,G,qc)
+        # cast inside the block: lax.map stacks its output, and an f32
+        # stack is a (nq, B, qc, H, hd) buffer — 2x the bf16 one that
+        # the rest of the network needs (10 GB vs 5 GB per 72B layer
+        # stack; §Perf it. 4)
+        return (out.transpose(0, 3, 1, 2, 4).astype(q.dtype),
+                lse.transpose(0, 3, 1, 2))
+
+    outs, lses = lax.map(q_block, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, Kh, G, hd)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, T, Kh, G)
+    return out.reshape(B, T, H, hd), lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, causal, window, q_offset,
+                    qc, kc):
+    B, T, H, hd = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = hd ** -0.5
+    nq, nk = T // qc, S // kc
+
+    qg = q.reshape(B, T, Kh, G, hd)
+    og = out.reshape(B, T, Kh, G, hd)
+    dog = do.reshape(B, T, Kh, G, hd)
+    lseg = lse.reshape(B, T, Kh, G)
+    # D_t = sum_d do_t * out_t  (per query)
+    Dv = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1)
+
+    def q_block(carry, iq):
+        dk_acc, dv_acc = carry
+        q_pos = iq * qc + jnp.arange(qc) + q_offset
+        qb = lax.dynamic_slice_in_dim(qg, iq * qc, qc, axis=1)
+        dob = lax.dynamic_slice_in_dim(dog, iq * qc, qc, axis=1)
+        lb = lax.dynamic_slice_in_dim(lseg, iq * qc, qc, axis=1)
+        Db = lax.dynamic_slice_in_dim(Dv, iq * qc, qc, axis=1)
+        lb = lb.transpose(0, 2, 3, 1)                    # (B,Kh,G,qc)
+        Db = Db.transpose(0, 2, 3, 1)
+
+        def kv_step(inner, ik):
+            dq_b, dk_acc, dv_acc = inner
+            kb = lax.dynamic_slice_in_dim(k, ik * kc, kc, axis=1)
+            vb = lax.dynamic_slice_in_dim(v, ik * kc, kc, axis=1)
+            kv_pos = ik * kc + jnp.arange(kc)
+            s = jnp.einsum("btkgd,bskd->bkgts", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            ok = _mask_tile(q_pos, kv_pos, causal, window)
+            s = jnp.where(ok[None, None, None, :, :], s, NEG_INF)
+            p = jnp.exp(s - lb[..., None])               # exact probs
+            dp = jnp.einsum("btkgd,bskd->bkgts", dob, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Db[..., None]) * scale
+            dsq = ds.astype(qb.dtype)
+            dq_t = jnp.einsum("bkgts,bskd->btkgd", dsq, kb,
+                              preferred_element_type=jnp.float32)
+            dk_t = jnp.einsum("bkgts,btkgd->bskd", dsq, qb,
+                              preferred_element_type=jnp.float32)
+            dv_t = jnp.einsum("bkgts,btkgd->bskd",
+                              p.astype(dob.dtype), dob,
+                              preferred_element_type=jnp.float32)
+            dk_acc = lax.dynamic_update_slice_in_dim(
+                dk_acc, lax.dynamic_slice_in_dim(dk_acc, ik * kc, kc, 1)
+                + dk_t, ik * kc, axis=1)
+            dv_acc = lax.dynamic_update_slice_in_dim(
+                dv_acc, lax.dynamic_slice_in_dim(dv_acc, ik * kc, kc, 1)
+                + dv_t, ik * kc, axis=1)
+            return (dq_b + dq_t, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, qc, Kh, G, hd), jnp.float32)
+        (dq_b, dk_acc, dv_acc), _ = lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((B, S, Kh, hd), jnp.float32)
+    dv0 = jnp.zeros((B, S, Kh, hd), jnp.float32)
+    (dk, dv), dqs = lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_offset, qc, kc):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, qc, kc)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, qc, kc):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, qc, kc)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, qc, kc, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, do, causal, window,
+                           q_offset, qc, kc)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, kv_len=None,
+                    q_chunk: int = 512, k_chunk: int = 1024):
+    """Chunked flash attention (see module notes).  kv_len unused here —
+    decode goes through :func:`decode_attention`."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    qc = min(q_chunk, T)
+    kc = min(k_chunk, S)
+    padT = (-T) % qc
+    padS = (-S) % kc
+    if padT or padS:
+        q = jnp.pad(q, ((0, 0), (0, padT), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, padS), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padS), (0, 0), (0, 0)))
+    out = _flash(q, k, v, causal, window, q_offset, qc, kc)
+    return out[:, :T]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-position attention against a filled cache.
+
+    q (B, 1, H, hd); caches (B, S, Kh, hd); cache_len scalar or (B,).
+    """
+    B, _, H, hd = q.shape
+    S, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    pos = jnp.arange(S)
+    ok = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if window > 0:
+        ok &= pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# dense feed-forward
+# ----------------------------------------------------------------------
+def ffn_apply(params, x, kind: str = "swiglu"):
+    """SwiGLU (llama-family) or GELU (musicgen/granite-style) MLP."""
+    if kind == "swiglu":
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = x @ params["w_up"]
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+def ffn_init(key, d: int, f: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dtype),
+         "w_down": dense_init(ks[1], (f, d), dtype)}
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN — top-k token-choice routing, sort-based dispatch.
+
+Implements the routing used by OLMoE (64e top-8) and Moonlight (64e
+top-6 + shared experts).  The dispatch is the memory-sane production
+form (MaxText-style): instead of a GShard (T, E, C) one-hot dispatch
+tensor — 16 TB for the 32k-token cells — token copies are *sorted by
+expert*, ranked within their expert run, dropped beyond capacity, and
+scattered into an (E·C, d) buffer that is einsum'ed against the stacked
+expert weights:
+
+    buffer (E, C, d) x w_up (E, d, f) -> (E, C, f)     [EP-sharded on E]
+
+Under the mesh this yields the canonical all-to-all on the ``model``
+axis (tokens resharded from data-parallel to expert-parallel layout);
+see EXPERIMENTS.md §Dry-run for the collective schedule it produces.
+
+Every step is static-shaped; dropped tokens fall into a sentinel slot
+and contribute zero on combine (load-balance aux loss reported so the
+trainer can watch router collapse — the HST telemetry monitor consumes
+exactly that series).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act_sharding import constrain
+
+from .layers import dense_init
+
+
+def moe_init(key, cfg, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),  # fp32 router
+        "w_gate": dense_init(ks[1], (E, d, f), dtype),
+        "w_up": dense_init(ks[2], (E, d, f), dtype),
+        "w_down": dense_init(ks[3], (E, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        from .layers import ffn_init
+        p["shared"] = ffn_init(ks[4], d, f * cfg.n_shared_experts,
+                               "swiglu", dtype)
+    return p
+
+
+def moe_apply(params, x, cfg):
+    """x (B, T, d) -> (B, T, d); returns (out, aux) with router stats."""
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * T
+    C = max(8, int(round(N * K / E * cfg.capacity_factor)))
+
+    xf = x.reshape(N, d)
+    logits = (xf.astype(jnp.float32) @ params["router"])         # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)                       # (N, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank within expert via one sort over N*K token copies -------
+    flat_e = expert.reshape(-1)                                  # (N*K,)
+    sort = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort]
+    # position within each expert's run
+    idx = jnp.arange(N * K, dtype=jnp.int32)
+    seg_start = jnp.full(E, N * K, jnp.int32).at[sorted_e].min(idx)
+    rank_sorted = idx - seg_start[sorted_e]
+    rank = jnp.zeros(N * K, jnp.int32).at[sort].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < C                                              # drop tail
+    slot = jnp.where(keep, flat_e * C + rank, E * C)             # sentinel
+
+    # ---- dispatch: (E*C+1, d) buffer, sentinel row discarded ---------
+    src = constrain(jnp.repeat(xf, K, axis=0), "dp", None)       # (N*K, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(src)
+    eb = buf[: E * C].reshape(E, C, d)
+    eb = constrain(eb, "tp", None, None)     # -> EP layout (all-to-all)
+
+    # ---- expert computation (EP: E is the sharded axis) --------------
+    g = jnp.einsum("ecd,edf->ecf", eb, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", eb, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eo = jnp.einsum("ecf,efd->ecd", h, params["w_down"])         # (E, C, d)
+    eo = constrain(eo, "tp", None, None)
+
+    # ---- combine ------------------------------------------------------
+    flat_out = jnp.concatenate(
+        [eo.reshape(E * C, d), jnp.zeros((1, d), x.dtype)])      # sentinel
+    tok_out = flat_out[slot].reshape(N, K, d)
+    out = jnp.einsum("nkd,nk->nd", tok_out,
+                     gate.astype(jnp.float32).astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        from .layers import ffn_apply
+        out = out + ffn_apply(params["shared"], xf, "swiglu")
+
+    # ---- aux stats (load-balance loss + drop fraction) ----------------
+    me = probs.mean(0)                                           # (E,)
+    ce = jnp.zeros(E, jnp.float32).at[flat_e].add(1.0) / (N * K)
+    aux = {"lb_loss": E * jnp.sum(me * ce),
+           "drop_frac": 1.0 - keep.mean(),
+           "router_entropy": -jnp.sum(me * jnp.log(me + 1e-9))}
+    return out.reshape(B, T, d), aux

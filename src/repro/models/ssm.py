@@ -1,0 +1,256 @@
+"""State-space sequence mixers: RWKV6 (Finch) and Mamba (for Hymba).
+
+Both are linear-recurrent, giving O(1)-state decode — these are the two
+archs that keep the ``long_500k`` cell alive (DESIGN.md §6).
+
+RWKV6 time-mix (Peng et al. 2024, arXiv:2404.05892):
+    per head h with size D:   S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+                              y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+with data-dependent decay w_t = exp(-exp(w0 + LoRA(x_t))).  Training
+uses the *chunked* form — within a chunk of length c the cross terms
+are two matmuls with cumulative-decay weighting (MXU-friendly), the
+state is carried between chunks by a `lax.scan`.  A per-step reference
+(`rwkv_wkv_ref`) validates it in tests.
+
+Mamba selective scan (diagonal A): h_t = a_t ⊙ h_{t-1} + b_t with
+a_t = exp(Δ_t A), b_t = Δ_t B_t x_t — a first-order linear recurrence
+solved with `lax.associative_scan` inside chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init, rms_norm
+
+
+# ======================================================================
+# RWKV6
+# ======================================================================
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    lora = 64
+    ks = jax.random.split(key, 10)
+    H = d // max(cfg.ssm_state, 64)       # head size = ssm_state (64 def.)
+    del H
+    return {
+        "w_r": dense_init(ks[0], (d, d), dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay LoRA (fp32 — exp(-exp(.)) is sensitive)
+        "w_decay_a": dense_init(ks[5], (d, lora), jnp.float32),
+        "w_decay_b": dense_init(ks[6], (lora, d), jnp.float32, scale=0.01),
+        "decay0": jnp.linspace(-6.0, -0.5, d).astype(jnp.float32),
+        "bonus_u": jnp.zeros(d, jnp.float32),
+        "mix": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,g,w shifts
+        "ln_x": jnp.zeros(d, jnp.float32),            # per-head groupnorm
+    }
+
+
+def _token_shift(x, mix, last=None):
+    """lerp(x, shift(x), mix) — RWKV's 1-step convolution.
+
+    ``last`` (B, d) supplies the previous token in decode mode.
+    """
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return x + (prev - x) * mix
+
+
+def rwkv_wkv_chunked(r, k, v, w, u, head_size: int, chunk: int = 128,
+                     state0=None):
+    """Chunked WKV.  r,k,v (B,T,d); w (B,T,d) decay in (0,1); u (d,).
+
+    Returns (y (B,T,d), state (B,H,D,D)) with d = H*D, D = head_size.
+    """
+    B, T, d = r.shape
+    D = head_size
+    H = d // D
+    c = min(chunk, T)
+    nc = -(-T // c)
+    Tp = nc * c
+    pad = Tp - T
+
+    def rs(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        return x.reshape(B, nc, c, H, D).transpose(1, 0, 3, 2, 4)
+
+    rr, kk, vv = rs(r), rs(k), rs(v)                    # (nc,B,H,c,D)
+    ww = rs(w.astype(jnp.float32))
+    # pad region: decay 1 (identity), kv 0 -> state unchanged, y junk
+    if pad:
+        ww = ww.at[-1, :, :, c - pad:, :].set(1.0)
+    lw = jnp.log(jnp.maximum(ww, 1e-12))                # log decay
+    cum = jnp.cumsum(lw, axis=3)                        # prod w_1..w_t
+    tot = cum[:, :, :, -1:, :]                          # full-chunk decay
+
+    uf = u.reshape(H, D).astype(jnp.float32)
+
+    def chunk_step(S, xs):
+        rr, kk, vv, lw, cum, tot = xs
+        rf = rr.astype(jnp.float32)
+        kf = kk.astype(jnp.float32)
+        vf = vv.astype(jnp.float32)
+        # inter-chunk: y_inter[t] = (r_t * prod(w_1..w_{t-1})) @ S
+        r_dec = rf * jnp.exp(cum - lw)                  # decay up to t-1
+        y_inter = jnp.einsum("bhtd,bhde->bhte", r_dec, S)
+        # intra-chunk: pairwise decay prod_{j=tau+1}^{t-1} w_j (tau < t)
+        # = exp(cum[t-1] - cum[tau]) = exp((cum[t]-lw[t]) - cum[tau])
+        a = (cum - lw)[:, :, :, None, :]                # (B,H,t,1,D)
+        b = cum[:, :, None, :, :]                       # (B,H,1,tau,D)
+        dec = jnp.exp(jnp.minimum(a - b, 0.0))          # guard overflow
+        att = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rf, kf, dec)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        # diagonal bonus u
+        diag = jnp.einsum("bhtd,bhtd,hd->bht", rf, kf,
+                          uf)[..., None] * vf
+        y_intra = jnp.einsum("bhts,bhsd->bhtd", att, vf) + diag
+        # state update: S' = diag(tot) S + sum_tau exp(tot-cum[tau]) k v
+        k_dec = kf * jnp.exp(tot - cum)
+        S_new = jnp.exp(tot[:, :, 0])[..., None] * S + \
+            jnp.einsum("bhtd,bhte->bhde", k_dec, vf)
+        return S_new, (y_inter + y_intra)
+
+    S0 = (jnp.zeros((B, H, D, D), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    S, ys = lax.scan(chunk_step, S0, (rr, kk, vv, lw, cum, tot))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Tp, d)[:, :T]
+    return y.astype(r.dtype), S
+
+
+def rwkv_wkv_ref(r, k, v, w, u, head_size: int):
+    """Per-timestep oracle for the chunked WKV (tests only)."""
+    B, T, d = r.shape
+    D = head_size
+    H = d // D
+    rs = lambda x: x.astype(jnp.float32).reshape(B, T, H, D)
+    rf, kf, vf, wf = rs(r), rs(k), rs(v), rs(w)
+    uf = u.reshape(H, D).astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                             # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]        # (B,H,D,D)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S + uf[..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    _, ys = lax.scan(step, S0,
+                     (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+                      vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).reshape(B, T, d)
+
+
+def rwkv_time_mix(params, x, cfg, *, state=None, last_tok=None,
+                  chunk: int | None = None):
+    """Full RWKV6 time-mix block.  Returns (out, new_state, new_last)."""
+    D = cfg.ssm_state if cfg.ssm_state >= 16 else 64
+    mix = params["mix"]
+    xr = _token_shift(x, mix[0], last_tok)
+    xk = _token_shift(x, mix[1], last_tok)
+    xv = _token_shift(x, mix[2], last_tok)
+    xg = _token_shift(x, mix[3], last_tok)
+    xw = _token_shift(x, mix[4], last_tok)
+    r = xr @ params["w_r"]
+    k = xk @ params["w_k"]
+    v = xv @ params["w_v"]
+    g = jax.nn.silu((xg @ params["w_g"]).astype(jnp.float32))
+    dec = params["decay0"] + (
+        xw.astype(jnp.float32) @ params["w_decay_a"]) @ params["w_decay_b"]
+    w = jnp.exp(-jnp.exp(dec))                          # (B,T,d) in (0,1)
+    y, S = rwkv_wkv_chunked(r, k, v, w, params["bonus_u"], D,
+                            chunk=chunk or cfg.ssm_chunk, state0=state)
+    y = rms_norm(y, params["ln_x"], cfg.norm_eps)       # per-channel norm
+    out = (y.astype(jnp.float32) * g).astype(x.dtype) @ params["w_o"]
+    return out, S, x[:, -1]
+
+
+def rwkv_channel_mix_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"w_kk": dense_init(ks[0], (d, f), dtype),
+            "w_vv": dense_init(ks[1], (f, d), dtype),
+            "w_rr": dense_init(ks[2], (d, d), dtype),
+            "mix": 0.5 * jnp.ones((2, d), jnp.float32)}
+
+
+def rwkv_channel_mix(params, x, last_tok=None):
+    xk = _token_shift(x, params["mix"][0], last_tok)
+    xr = _token_shift(x, params["mix"][1], last_tok)
+    kk = jnp.square(jax.nn.relu(xk @ params["w_kk"]))
+    rr = jax.nn.sigmoid((xr @ params["w_rr"]).astype(jnp.float32))
+    return (rr * (kk @ params["w_vv"]).astype(jnp.float32)
+            ).astype(x.dtype), x[:, -1]
+
+
+# ======================================================================
+# Mamba (diagonal selective SSM) — Hymba's parallel branch
+# ======================================================================
+def mamba_init(key, cfg, dtype):
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, d), dtype),
+        "out_proj": dense_init(ks[1], (d, d), dtype),
+        "w_bc": dense_init(ks[2], (d, 2 * n), dtype),
+        "w_dt": dense_init(ks[3], (d, 1), jnp.float32, scale=0.01),
+        "A_log": jnp.log(jnp.linspace(1.0, float(n), n))[None, :]
+        * jnp.ones((d, 1), jnp.float32),                 # (d, n)
+        "D": jnp.ones(d, jnp.float32),
+        "dt_bias": jnp.zeros(1, jnp.float32),
+    }
+
+
+def mamba_scan(a, b, state0=None, chunk: int = 256):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 (T), chunked assoc-scan.
+
+    a, b: (B, T, d, n) float32.  Returns (h (B,T,d,n), last state).
+    """
+    B, T = a.shape[:2]
+    c = min(chunk, T)
+    nc = -(-T // c)
+    pad = nc * c - T
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ar = a.reshape(B, nc, c, *a.shape[2:]).transpose(1, 0, 2, 3, 4)
+    br = b.reshape(B, nc, c, *b.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, xs):
+        ac, bc = xs                                       # (B,c,d,n)
+        aa, bb = lax.associative_scan(assoc, (ac, bc), axis=1)
+        hc = bb + aa * h[:, None]                         # inject carry
+        return hc[:, -1], hc
+
+    h0 = (jnp.zeros_like(a[:, 0]) if state0 is None else state0)
+    hN, hs = lax.scan(chunk_step, h0, (ar, br))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nc * c, *a.shape[2:])
+    return h[:, :T], hN
+
+
+def mamba_apply(params, x, cfg, *, state=None):
+    """Selective-SSM branch.  x (B,T,d) -> (out, new_state (B,d,n))."""
+    n = cfg.ssm_state
+    u = jax.nn.silu((x @ params["in_proj"]).astype(jnp.float32))
+    bc = (x @ params["w_bc"]).astype(jnp.float32)
+    Bm, Cm = bc[..., :n], bc[..., n:]                     # (B,T,n)
+    dt = jax.nn.softplus(
+        x.astype(jnp.float32) @ params["w_dt"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                         # (d, n)
+    a = jnp.exp(dt[..., None] * A[None, None])            # (B,T,d,n)
+    b = (dt * u)[..., None] * Bm[:, :, None, :]           # (B,T,d,n)
+    h, hN = mamba_scan(a, b, state0=state, chunk=cfg.ssm_chunk)
+    y = jnp.einsum("btdn,btn->btd", h, Cm) + params["D"] * u
+    return (y.astype(x.dtype) @ params["out_proj"]), hN

@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, apply_updates
+from .clip import clip_by_global_norm, global_norm
+from .compress import compressed_psum, dequantize_int8, quantize_int8
+from .schedule import cosine_warmup
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "apply_updates",
+           "global_norm", "clip_by_global_norm", "cosine_warmup",
+           "quantize_int8", "dequantize_int8", "compressed_psum"]

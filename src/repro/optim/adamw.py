@@ -1,0 +1,61 @@
+"""AdamW, hand-rolled on pytrees (no optax dependency offline).
+
+Moments are stored in float32 regardless of the param dtype (bf16
+training keeps fp32 optimizer state — the production default), sharded
+exactly like their parameters (the trainer reuses ``param_specs``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree_util.tree_map(f32, params),
+            "nu": jax.tree_util.tree_map(f32, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
+    """Returns (updates, new_state).  ``lr`` may be a traced scalar."""
+    c = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+    def mom(mu, g):
+        return b1 * mu + (1 - b1) * g.astype(jnp.float32)
+
+    def sq(nu, g):
+        g = g.astype(jnp.float32)
+        return b2 * nu + (1 - b2) * g * g
+
+    mu = jax.tree_util.tree_map(mom, state["mu"], grads)
+    nu = jax.tree_util.tree_map(sq, state["nu"], grads)
+
+    def upd(m, v, p):
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                      # decay matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * step).astype(p.dtype)
+
+    updates = jax.tree_util.tree_map(upd, mu, nu, params)
+    return updates, {"mu": mu, "nu": nu, "count": c}
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,5 @@
+from .sharding import (batch_specs, cache_specs, data_axes, fit_spec,
+                       param_specs, shardings_for)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "fit_spec",
+           "data_axes", "shardings_for"]

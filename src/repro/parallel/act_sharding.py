@@ -1,0 +1,69 @@
+"""Activation sharding constraints, symbolically named.
+
+Model code never sees the mesh: it calls ``constrain(x, "dp", None,
+"tp")`` with symbolic axis names and this module resolves them against
+the active mesh ("dp" -> the composed (pod, data) axes, "tp" ->
+"model"), dropping any axis that does not divide the dimension (same
+safety rule as the parameter spec table).
+
+When no mesh is active (CPU smoke tests) ``constrain`` is an exact
+no-op, so the model runs unmodified on one device.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _axes() -> Optional[Tuple[Mesh, tuple]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextmanager
+def activation_mesh(mesh: Mesh):
+    """Activate constraint resolution for the duration of a trace."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, dp)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def constrain(x, *names):
+    """with_sharding_constraint by symbolic names; no-op without mesh."""
+    ctx = _axes()
+    if ctx is None:
+        return x
+    mesh, dp = ctx
+    resolved = []
+    for i, n in enumerate(names):
+        if n == "dp":
+            ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+        elif n == "tp":
+            ax = "model"
+        else:
+            ax = n
+        if ax is not None and x.shape[i] % _size(mesh, ax) != 0:
+            ax = None
+        resolved.append(ax)
+    spec = P(*resolved)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

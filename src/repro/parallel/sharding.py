@@ -1,0 +1,170 @@
+"""Sharding rule table: parameter/batch/cache pytrees -> PartitionSpecs.
+
+Mesh contract (launch/mesh.py):
+  single-pod   (data=16, model=16)
+  multi-pod    (pod=2, data=16, model=16)
+
+Parameters are 2-D sharded (TP on ``model`` + FSDP on ``data``); they
+never touch ``pod`` — cross-pod traffic is exclusively the gradient
+all-reduce, which XLA emits hierarchically (reduce-scatter in-pod,
+all-reduce across pods).  Batches shard over ``(pod, data)``.
+
+Every spec is passed through :func:`fit_spec`, which drops a mesh axis
+from any dimension it does not divide (e.g. granite's single KV head,
+hymba's 32001 vocab before padding) — the dry-run must never fail on a
+divisibility technicality, and the fallback is always the safe one
+(replication on that dim).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The composed data-parallel axis: ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim."""
+    fixed = []
+    for i, axis in enumerate(spec):
+        if axis is None or i >= len(shape):
+            fixed.append(None if i >= len(shape) else axis)
+            continue
+        fixed.append(axis if shape[i] % _axis_size(mesh, axis) == 0
+                     else None)
+    fixed = fixed[: len(shape)]
+    while len(fixed) < len(shape):
+        fixed.append(None)
+    return P(*fixed)
+
+
+# ----------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------
+_COL = ("w_q", "w_k", "w_v", "w_g", "w_up", "w_gate", "w_kk", "w_rr",
+        "w_r", "in_proj", "lm_head")             # (d_in, d_out) -> TP out
+_ROW = ("w_o", "w_down", "w_vv", "out_proj")     # (d_out, d_in) -> TP in
+_EXPERT = ("w_gate", "w_up", "w_down")           # under a "moe" parent
+
+
+def _leaf_spec(path: Tuple[str, ...], ndim: int,
+               fsdp_blocks: bool = False) -> P:
+    name = path[-1]
+    in_moe = "moe" in path and name in _EXPERT
+    stacked = "layers" in path
+    lead = (None,) if stacked else ()
+
+    if in_moe:                                   # (L, E, d, f) / (L, E, f, d)
+        return P(*lead, "model", "data", None)
+    if name == "embed":                          # (Vp, d)
+        return P("model", "data")
+    if name == "router":                         # (L, d, E)
+        return P(*lead, "data", None)
+    if fsdp_blocks and stacked and ndim - len(lead) == 2 \
+            and (name in _COL or name in _ROW):
+        # ZeRO-3: one dim sharded over the whole mesh; GSPMD gathers
+        # the weight per layer instead of all-reducing activations
+        return P(*lead, ("data", "model"), None)
+    if name in ("w_rr",) or (name in _COL and ndim - len(lead) == 2):
+        return P(*lead, "data", "model")
+    if name in _ROW and ndim - len(lead) == 2:
+        return P(*lead, "model", "data")
+    if name in ("b_q", "b_k", "b_v"):            # (L, Hhd)
+        return P(*lead, "model")
+    if name in ("w_decay_a", "w_bc", "w_dt", "A_log"):
+        return P(*lead, "data", None)
+    if name == "w_decay_b":
+        return P(*lead, None, None)
+    # norms, mixes, small vectors: replicated
+    return P(*([None] * ndim))
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching ``params``."""
+
+    def one(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                      for k in path)
+        spec = _leaf_spec(names, leaf.ndim,
+                          getattr(cfg, "fsdp_blocks", False))
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ----------------------------------------------------------------------
+# batches / caches
+# ----------------------------------------------------------------------
+def batch_specs(batch_tree, cfg: ModelConfig, mesh: Mesh):
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape
+        if name in ("tokens", "loss_mask", "targets"):
+            spec = P(dp, None)
+        elif name == "positions":
+            spec = P(dp, *([None] * (len(shape) - 1)))
+        elif name == "prefix_embeds":
+            spec = P(dp, None, None)
+        else:
+            spec = P(*([None] * len(shape)))
+        return fit_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, mesh: Mesh):
+    """Decode caches: batch over dp; heads (or head_dim) over model.
+
+    MQA/GQA counts that don't divide the model axis fall back to
+    sharding head_dim (always 64/128 here), per DESIGN.md §5.
+    """
+    dp = data_axes(mesh)
+    msize = mesh.shape["model"]
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape
+        if name in ("k", "v"):                   # (L, B, S, Kh, hd)
+            if cfg.n_kv_heads % msize == 0:
+                spec = P(None, dp, None, "model", None)
+            else:
+                spec = P(None, dp, None, None, "model")
+        elif name == "wkv":                      # (L, B, H, D, D)
+            spec = P(None, dp, "model", None, None)
+        elif name in ("tail_t", "tail_c"):       # (L, B, d)
+            spec = P(None, dp, "model")
+        elif name == "mamba":                    # (L, B, d, n)
+            spec = P(None, dp, "model", None)
+        elif name == "pos":                      # (L, B, W)
+            spec = P(None, dp, None)
+        else:
+            spec = P(*([None] * len(shape)))
+        return fit_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def shardings_for(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+from .buffer import MetricBuffer
+from .monitor import DiscordMonitor, MonitorReport
+from .straggler import StragglerDetector
+
+__all__ = ["MetricBuffer", "DiscordMonitor", "MonitorReport",
+           "StragglerDetector"]

@@ -1,0 +1,41 @@
+"""Ring buffers for training/serving time series (host-side, cheap)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class MetricBuffer:
+    """Fixed-capacity ring buffer per metric name."""
+
+    def __init__(self, capacity: int = 65_536):
+        self.capacity = capacity
+        self._data: Dict[str, np.ndarray] = {}
+        self._n: Dict[str, int] = {}
+
+    def log(self, step: int, metrics: Dict[str, float]) -> None:
+        for k, v in metrics.items():
+            if k not in self._data:
+                self._data[k] = np.zeros(self.capacity)
+                self._n[k] = 0
+            i = self._n[k] % self.capacity
+            self._data[k][i] = float(v)
+            self._n[k] += 1
+
+    def series(self, name: str) -> np.ndarray:
+        """Chronological values (oldest first)."""
+        if name not in self._data:
+            return np.zeros(0)
+        n = self._n[name]
+        if n <= self.capacity:
+            return self._data[name][:n].copy()
+        i = n % self.capacity
+        return np.concatenate([self._data[name][i:],
+                               self._data[name][:i]])
+
+    def names(self) -> List[str]:
+        return list(self._data)
+
+    def __len__(self) -> int:
+        return max(self._n.values(), default=0)

@@ -1,0 +1,101 @@
+"""HST discord monitor — the paper's algorithm as a framework feature.
+
+Training and serving emit time series (loss, grad-norm, per-expert
+router load, step wall-time, activation norms).  Anomalies in those
+series — loss spikes, data corruption, router collapse, a failing
+host — are exactly *discords*: windows maximally far from every other
+window.  The monitor runs the paper's HST (exact, cheap: the series
+are 1e3-1e5 points) over each registered metric and flags windows whose
+nnd stands out from the profile body.
+
+The significance rule follows Avogadro et al. 2020 ("significant
+discords"): a discord is flagged only when its nnd exceeds
+``median(nnd_profile) + z * IQR`` — raw discords always exist (they are
+just the profile maxima), flags should not.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import find_discords
+from repro.core.serial.brute import exact_nnd_profile
+
+from .buffer import MetricBuffer
+
+
+@dataclass
+class MonitorReport:
+    metric: str
+    positions: List[int]
+    nnds: List[float]
+    threshold: float
+    flagged: List[int] = field(default_factory=list)
+
+    @property
+    def any_flagged(self) -> bool:
+        return bool(self.flagged)
+
+
+class DiscordMonitor:
+    """Periodic exact-discord scan over telemetry series."""
+
+    def __init__(self, buffer: MetricBuffer, *, window: int = 32,
+                 k: int = 3, z: float = 3.0, min_points: int = 256,
+                 method: str = "hst", difference: bool = True):
+        self.buffer = buffer
+        self.window = window
+        self.k = k
+        self.z = z
+        self.min_points = min_points
+        self.method = method
+        # Discords are found on the FIRST DIFFERENCE of the metric by
+        # default.  Z-normalized distance is level-blind: a plateau
+        # anomaly (level shift) in an otherwise noisy-flat series has
+        # *lower* nnd than the noise body (the edge windows pair up
+        # across the shift — measured in tests/test_substrate.py).
+        # Differencing turns level shifts into impulses, which are
+        # strong shape discords, and detrends drifting metrics.
+        self.difference = difference
+
+    def scan_metric(self, name: str) -> Optional[MonitorReport]:
+        x = self.buffer.series(name)
+        if x.shape[0] < max(self.min_points, 4 * self.window):
+            return None
+        if np.allclose(x, x[0]):
+            return MonitorReport(name, [], [], np.inf)
+        if self.difference:
+            x = np.diff(x)
+        # standardize ONCE globally, then search with raw Euclidean
+        # windows: per-window z-normalization is level/magnitude-blind
+        # and telemetry anomalies are mostly magnitude events (see
+        # module docstring + tests/test_substrate.py)
+        x = (x - x.mean()) / max(x.std(), 1e-12)
+        res = find_discords(x, self.window, self.k, method=self.method,
+                            P=4, alpha=4, znorm=False)
+        # significance threshold from a subsampled profile body
+        body = self._profile_body(x)
+        med = float(np.median(body))
+        iqr = float(np.percentile(body, 75) - np.percentile(body, 25))
+        thr = med + self.z * max(iqr, 1e-12)
+        flagged = [p for p, v in zip(res.positions, res.nnds)
+                   if v > thr and p >= 0]
+        return MonitorReport(name, res.positions, res.nnds, thr, flagged)
+
+    def scan(self) -> Dict[str, MonitorReport]:
+        out = {}
+        for name in self.buffer.names():
+            rep = self.scan_metric(name)
+            if rep is not None:
+                out[name] = rep
+        return out
+
+    def _profile_body(self, x: np.ndarray, cap: int = 2048) -> np.ndarray:
+        """nnd profile of (a subsample of) the series, for thresholds."""
+        if x.shape[0] > cap:
+            stride = x.shape[0] // cap
+            x = x[: cap * stride: stride]
+        return exact_nnd_profile(x, min(self.window, x.shape[0] // 4),
+                                 znorm=False)

@@ -1,0 +1,69 @@
+"""Straggler detection over per-host step-time series.
+
+At pod scale, a slow host (thermal throttling, failing HBM, a busy
+neighbor) shows up as that host's step-time series drifting away from
+the fleet's.  Two complementary detectors:
+
+  * cross-sectional: per step, hosts slower than fleet median by
+    ``ratio`` are suspects (classic, catches hard stragglers fast);
+  * temporal: the HST discord monitor over each host's step-time
+    series catches *intermittent* stragglers whose slow windows are
+    anomalous relative to their own history even when the fleet is
+    noisy (the paper's technique, applied where simple thresholds
+    fail).
+
+``decide`` merges both: a host flagged by either for ``patience``
+consecutive scans is reported for eviction/restart (the trainer wires
+this to checkpoint-and-rescale; see launch/elastic.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from .buffer import MetricBuffer
+from .monitor import DiscordMonitor
+
+
+class StragglerDetector:
+    def __init__(self, n_hosts: int, *, ratio: float = 1.5,
+                 window: int = 16, patience: int = 2):
+        self.n_hosts = n_hosts
+        self.ratio = ratio
+        self.patience = patience
+        self.buffer = MetricBuffer()
+        # conservative z: evicting a healthy host costs a restart, so
+        # the temporal path only reacts to extreme step-time discords
+        self.monitor = DiscordMonitor(self.buffer, window=window, k=1,
+                                      min_points=64, z=6.0)
+        self._strikes = np.zeros(n_hosts, dtype=np.int64)
+
+    def log_step(self, step: int, host_times: np.ndarray) -> None:
+        self.buffer.log(step, {f"host_{h:04d}": t
+                               for h, t in enumerate(host_times)})
+
+    def cross_sectional(self) -> List[int]:
+        latest = np.array([self.buffer.series(f"host_{h:04d}")[-1]
+                           for h in range(self.n_hosts)])
+        med = np.median(latest)
+        return [int(h) for h in np.flatnonzero(latest > self.ratio * med)]
+
+    def temporal(self) -> List[int]:
+        out = []
+        for h in range(self.n_hosts):
+            rep = self.monitor.scan_metric(f"host_{h:04d}")
+            if rep is not None and rep.any_flagged:
+                out.append(h)
+        return out
+
+    def decide(self) -> Dict[str, List[int]]:
+        cs = set(self.cross_sectional())
+        tp = set(self.temporal()) if len(self.buffer) >= 64 else set()
+        suspects = cs | tp
+        for h in range(self.n_hosts):
+            self._strikes[h] = self._strikes[h] + 1 if h in suspects else 0
+        evict = [int(h) for h in
+                 np.flatnonzero(self._strikes >= self.patience)]
+        return {"suspects": sorted(suspects), "evict": evict,
+                "cross_sectional": sorted(cs), "temporal": sorted(tp)}

@@ -1,0 +1,4 @@
+from .step import input_specs, make_serve_step, make_train_step, train_state_init
+
+__all__ = ["make_train_step", "make_serve_step", "train_state_init",
+           "input_specs"]

@@ -1,0 +1,128 @@
+"""The training loop: checkpoint/restart, telemetry, straggler hooks.
+
+Production behaviors exercised by tests:
+  * auto-resume from the newest valid checkpoint (kill -9 safe);
+  * HST discord monitoring of loss/grad-norm series with configurable
+    reaction ("warn" | "skip_anomalous_update");
+  * straggler scan over simulated per-host step times;
+  * elastic restart: restore the same checkpoint under a different
+    device count / mesh (launch/elastic.py drives this).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.telemetry import DiscordMonitor, MetricBuffer
+
+from .step import make_train_step, train_state_init
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    peak_lr: float = 3e-4
+    warmup: int = 200
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_dir: str = "checkpoints"
+    monitor_every: int = 0          # 0 = off
+    monitor_window: int = 16
+    on_anomaly: str = "warn"        # warn | skip_anomalous_update
+    log_every: int = 10
+    seed: int = 0
+
+
+@dataclass
+class TrainerState:
+    params: object
+    opt_state: object
+    step: int = 0
+    anomalies: list = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, *,
+                 step_fn: Optional[Callable] = None,
+                 log_fn: Optional[Callable] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.step_fn = jax.jit(step_fn or make_train_step(
+            cfg, total_steps=tcfg.total_steps, peak_lr=tcfg.peak_lr,
+            warmup=tcfg.warmup))
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir,
+                                      every=tcfg.ckpt_every,
+                                      keep=tcfg.ckpt_keep)
+        self.metrics = MetricBuffer()
+        self.monitor = DiscordMonitor(
+            self.metrics, window=tcfg.monitor_window,
+            min_points=4 * tcfg.monitor_window)
+        self.log_fn = log_fn or (lambda *a, **k: None)
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self) -> TrainerState:
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = init_params(key, self.cfg)
+        opt_state = train_state_init(params)
+        like = {"params": params, "opt": opt_state}
+        restored, step = self.ckpt.restore_latest(like)
+        if restored is not None:
+            return TrainerState(params=restored["params"],
+                                opt_state=restored["opt"],
+                                step=step)
+        return TrainerState(params=params, opt_state=opt_state, step=0)
+
+    # ------------------------------------------------------------------
+    def run(self, batches: Iterator[dict],
+            state: Optional[TrainerState] = None) -> TrainerState:
+        st = state or self.init_or_restore()
+        t_prev = time.perf_counter()
+        while st.step < self.tcfg.total_steps:
+            batch = next(batches)
+            batch = {k: v for k, v in batch.items() if k != "step"}
+            params, opt_state, m = self.step_fn(
+                st.params, st.opt_state, batch, st.step)
+            now = time.perf_counter()
+            host_m = {k: float(v) for k, v in m.items()
+                      if np.ndim(v) == 0}
+            host_m["step_time_s"] = now - t_prev
+            t_prev = now
+            self.metrics.log(st.step, host_m)
+
+            take_update = True
+            if (self.tcfg.monitor_every
+                    and st.step and st.step % self.tcfg.monitor_every == 0):
+                reports = self.monitor.scan()
+                for name, rep in reports.items():
+                    if rep.any_flagged:
+                        st.anomalies.append(
+                            {"step": st.step, "metric": name,
+                             "positions": rep.flagged})
+                        self.log_fn("anomaly", step=st.step, metric=name,
+                                    positions=rep.flagged)
+                if (self.tcfg.on_anomaly == "skip_anomalous_update"
+                        and "loss" in reports
+                        and self._loss_is_spiking(reports["loss"])):
+                    take_update = False
+            if take_update:
+                st.params, st.opt_state = params, opt_state
+            st.step += 1
+            if st.step % self.tcfg.log_every == 0:
+                self.log_fn("metrics", step=st.step, **host_m)
+            self.ckpt.maybe_save(
+                st.step, {"params": st.params, "opt": st.opt_state},
+                extra={"loss": host_m.get("loss")})
+        return st
+
+    def _loss_is_spiking(self, rep) -> bool:
+        """Anomalous *now*: a flagged loss window touching the newest
+        samples (historical discords should not veto current updates)."""
+        n = len(self.metrics.series("loss"))
+        return any(p + 2 * self.monitor.window >= n for p in rep.flagged)

@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device (the dry-run sets its own 512-device flag in its own
+process; multi-device tests spawn subprocesses)."""
+import numpy as np
+import pytest
+
+from repro.data.timeseries import (ecg_like, sine_noise,
+                                   with_implanted_anomalies)
+
+
+@pytest.fixture(scope="session")
+def anomalous_series():
+    x, pos = with_implanted_anomalies(
+        sine_noise(2000, E=0.1, seed=0), n_anomalies=1, length=64,
+        amp=0.8, seed=0)
+    return x, pos
+
+
+@pytest.fixture(scope="session")
+def ecg_series():
+    x, pos = with_implanted_anomalies(
+        ecg_like(3000, period=150, noise=0.03, seed=1),
+        n_anomalies=2, length=120, amp=0.6, seed=1)
+    return x, pos

@@ -1,0 +1,113 @@
+"""System invariants of the discord algorithms (the paper's core).
+
+The load-bearing properties:
+  1. EXACTNESS: hotsax / hst / hst_jax / matrix_profile return exactly
+     the brute-force discords (position and nnd) on arbitrary series;
+  2. the warm-up + topology nnd profile is a pointwise UPPER BOUND of
+     the true profile (that is the exactness argument's premise);
+  3. k discords never overlap (non-self-match rule);
+  4. dadd is exact whenever r < nnd of the k-th discord.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import find_discords
+from repro.core.serial.brute import exact_nnd_profile
+from repro.core.sax import SaxTable
+from repro.core.serial.common import CountedSeries
+from repro.core.serial.hst import _HstState
+
+
+def _mk_series(seed, n=600, kind="mix"):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    base = np.sin(0.07 * t) + 0.1 * rng.normal(size=n)
+    if kind == "mix":
+        p = int(rng.integers(100, n - 100))
+        base[p:p + 40] += rng.uniform(0.5, 1.5) * np.sin(
+            np.linspace(0, np.pi, 40))
+    return base
+
+
+EXACT_METHODS = ("hotsax", "hst", "hst_jax", "matrix_profile")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exactness_first_discord(seed):
+    x = _mk_series(seed)
+    s = 32
+    ref = find_discords(x, s, 1, method="brute")
+    for m in EXACT_METHODS:
+        r = find_discords(x, s, 1, method=m, seed=seed % 7)
+        assert r.positions == ref.positions, (m, r, ref)
+        assert r.nnds[0] == pytest.approx(ref.nnds[0], rel=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exactness_k_discords(seed):
+    x = _mk_series(seed, n=500)
+    s = 24
+    k = 3
+    ref = find_discords(x, s, k, method="brute")
+    for m in ("hotsax", "hst", "hst_jax"):
+        r = find_discords(x, s, k, method=m, seed=seed % 5)
+        assert r.positions == ref.positions, (m, seed)
+    # non-overlap
+    for i in range(k):
+        for j in range(i + 1, k):
+            assert abs(ref.positions[i] - ref.positions[j]) >= s
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_warmup_profile_is_upper_bound(seed):
+    x = _mk_series(seed, n=400)
+    s = 20
+    rng = np.random.default_rng(seed)
+    ctx = CountedSeries(x, s)
+    table = SaxTable(x, s, 4, 4)
+    stt = _HstState(ctx, table, rng)
+    stt.warm_up()
+    stt.short_range_time_topology()
+    true_prof = exact_nnd_profile(x, s)
+    # approximate nnd may only over-estimate, never under-estimate
+    assert np.all(stt.nnd >= true_prof - 1e-6)
+    # the neighbor stored must realize the stored distance
+    for i in range(0, ctx.n, 37):
+        g = int(stt.ngh[i])
+        if g >= 0:
+            assert ctx.d_block_raw(i, np.array([g]))[0] == \
+                pytest.approx(stt.nnd[i], abs=1e-6)
+
+
+def test_dadd_exact_below_r(anomalous_series):
+    x, _ = anomalous_series
+    s = 64
+    ref = find_discords(x, s, 2, method="brute")
+    r = find_discords(x, s, 2, method="dadd", r=0.9 * ref.nnds[-1])
+    assert r.positions == ref.positions
+    # r too large -> flagged, not silently wrong
+    r2 = find_discords(x, s, 2, method="dadd", r=1.5 * ref.nnds[0])
+    assert r2.extra["r_too_large"] or r2.positions == ref.positions
+
+
+def test_call_counts_sane(anomalous_series):
+    """HST must beat HOT SAX and both must beat brute force."""
+    x, _ = anomalous_series
+    s = 64
+    b = find_discords(x, s, 1, method="brute")
+    hs = find_discords(x, s, 1, method="hotsax")
+    h = find_discords(x, s, 1, method="hst")
+    assert h.calls < hs.calls < b.calls
+    assert h.cps < 60            # HST cps is small on benign series
+
+
+def test_implanted_anomaly_found(ecg_series):
+    x, pos = ecg_series
+    s = 120
+    r = find_discords(x, s, len(pos), method="hst")
+    for p in pos:
+        assert any(abs(q - p) < 2 * s for q in r.positions), (pos, r)

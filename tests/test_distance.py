@@ -1,0 +1,73 @@
+"""Distance layer: Eq.(1) == Eq.(2) == Eq.(3), counters, stats."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distance import DistanceCounter, dist_eq1, dist_eq2, dist_eq3
+from repro.core.windows import (moving_average_centered, num_sequences,
+                                sliding_stats, windows_view, znorm_windows)
+
+series_strategy = st.lists(
+    st.floats(min_value=-100, max_value=100, allow_nan=False,
+              width=32),
+    min_size=40, max_size=200)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=series_strategy, s=st.integers(4, 16), seed=st.integers(0, 99))
+def test_eq123_equivalent(data, s, seed):
+    x = np.asarray(data)
+    rng = np.random.default_rng(seed)
+    x = x + 1e-3 * rng.normal(size=x.shape[0])   # avoid constant windows
+    n = x.shape[0] - s + 1
+    if n < 2 * s + 2:
+        return
+    ctx = DistanceCounter(x, s)
+    z = znorm_windows(x, s)
+    i, j = 0, s + int(rng.integers(0, n - s - 1))
+    d1 = dist_eq1(z, i, j)
+    d2 = dist_eq2(ctx.win, ctx.mu, ctx.sigma, i, j)
+    d3 = dist_eq3(ctx.win, ctx.mu, ctx.sigma, s, i, j)
+    assert d1 == pytest.approx(d2, abs=1e-6)
+    assert d1 == pytest.approx(d3, abs=1e-4)
+    assert ctx.d(i, j) == pytest.approx(d1, abs=1e-4)
+
+
+def test_self_match_rejected():
+    ctx = DistanceCounter(np.random.default_rng(0).normal(size=100), 10)
+    with pytest.raises(ValueError):
+        ctx.d(5, 9)
+    with pytest.raises(ValueError):
+        ctx.d_block(5, np.array([3]))
+
+
+def test_counter_counts():
+    ctx = DistanceCounter(np.random.default_rng(0).normal(size=100), 10)
+    ctx.d(0, 50)
+    ctx.d_block(0, np.array([20, 30, 40]))
+    assert ctx.calls == 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=series_strategy, s=st.integers(4, 16))
+def test_sliding_stats_match_naive(data, s):
+    x = np.asarray(data)
+    if x.shape[0] < s + 2:
+        return
+    mu, sig = sliding_stats(x, s)
+    w = windows_view(x, s)[: mu.shape[0]]
+    assert np.allclose(mu, w.mean(axis=1), atol=1e-8)
+    assert np.allclose(sig, np.maximum(w.std(axis=1), 1e-10), atol=1e-6)
+
+
+def test_moving_average_borders():
+    x = np.arange(50, dtype=float)
+    out = moving_average_centered(x, 8)
+    assert out[0] == x[0] and out[-1] == x[-1]         # borders raw
+    assert np.allclose(out[10], x[10])                  # linear -> same
+
+
+def test_num_sequences_contract():
+    assert num_sequences(100, 10) == 91
+    with pytest.raises(ValueError):
+        num_sequences(10, 10)                           # only 1 sequence

@@ -1,0 +1,67 @@
+"""Multi-device discord search (shard_map) — runs on 8 simulated
+devices in a subprocess (device count must be set before jax init)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.core.distributed import (ring_matrix_profile, drag_discords,
+                                    distributed_discords)
+from repro.core.serial.brute import exact_nnd_profile
+from repro.core import find_discords
+
+rng = np.random.default_rng(0)
+x = np.sin(0.08 * np.arange(2500)) + 0.15 * rng.normal(size=2500)
+x[1200:1260] += 1.2 * np.sin(np.linspace(0, np.pi, 60))
+s = 80
+
+d, arg = ring_matrix_profile(x, s)
+prof = exact_nnd_profile(x, s)
+ok_mp = bool(np.allclose(d, prof, atol=1e-3))
+
+r_ring = distributed_discords(x, s, 3)
+r_drag = drag_discords(x, s, 3)
+r_ref = find_discords(x, s, 3, method="brute")
+# pruning power is only meaningful when r discriminates: k=1 puts r
+# just under the top discord's nnd
+r_drag1 = drag_discords(x, s, 1)
+print(json.dumps({
+    "ok_mp": ok_mp,
+    "ring_pos": r_ring.positions, "drag_pos": r_drag.positions,
+    "ref_pos": r_ref.positions,
+    "drag_survivors_k1": r_drag1.extra["survivors"],
+    "n": int(prof.shape[0]),
+}))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    p = subprocess.run([sys.executable, "-c", SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, p.stderr[-3000:]
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+def test_ring_matrix_profile_exact(result):
+    assert result["ok_mp"]
+
+
+def test_ring_discords_match_brute(result):
+    assert result["ring_pos"] == result["ref_pos"]
+
+
+def test_drag_discords_match_brute(result):
+    assert result["drag_pos"] == result["ref_pos"]
+
+
+def test_drag_pruning_effective(result):
+    """Phase 1 must kill the overwhelming majority of candidates when
+    the range r sits just under the top discord's nnd (k=1)."""
+    assert result["drag_survivors_k1"] < 0.2 * result["n"]

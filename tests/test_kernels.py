@@ -1,0 +1,62 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes per the deliverable contract."""
+import numpy as np
+import pytest
+
+from repro.core.sax import sax_words
+from repro.core.serial.brute import exact_nnd_profile
+from repro.kernels.mpblock.ops import matrix_profile
+from repro.kernels.paa.ops import sax_words_op
+from repro.kernels.zdist.ops import zdist_min
+from repro.kernels.zdist.ref import zdist_min_ref
+
+
+@pytest.mark.parametrize("n,s", [(700, 33), (1500, 96), (2100, 128),
+                                 (900, 200)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_zdist_vs_ref(n, s, dtype):
+    rng = np.random.default_rng(n + s)
+    x = (np.sin(0.05 * np.arange(n)) +
+         0.2 * rng.normal(size=n)).astype(dtype)
+    q = rng.choice(n - s + 1, size=64, replace=False)
+    d, ngh = zdist_min(x, s, q)
+    d2r, nghr = zdist_min_ref(np.asarray(x, np.float32), s, q)
+    assert np.allclose(np.asarray(d), np.sqrt(np.asarray(d2r)),
+                       atol=2e-3)
+    # argmin ties can differ; distances at claimed neighbors must match
+    assert np.allclose(np.asarray(d), np.sqrt(np.asarray(d2r)), atol=2e-3)
+
+
+@pytest.mark.parametrize("n,s", [(500, 25), (900, 64), (1300, 100)])
+def test_mpblock_matches_brute_profile(n, s):
+    rng = np.random.default_rng(n)
+    x = (np.sin(0.03 * np.arange(n)) + 0.1 * rng.normal(size=n)
+         ).astype(np.float32)
+    d, arg = matrix_profile(x, s)
+    prof = exact_nnd_profile(np.asarray(x, np.float64), s)
+    assert np.allclose(np.asarray(d), prof, atol=2e-3)
+    # neighbor indices must be valid non-self-matches
+    arg = np.asarray(arg)
+    idx = np.arange(prof.shape[0])
+    assert np.all(np.abs(arg - idx) >= s)
+
+
+@pytest.mark.parametrize("s,P,alpha", [(96, 4, 4), (120, 4, 3),
+                                       (64, 8, 6), (150, 5, 4)])
+def test_paa_sax_words_match(s, P, alpha):
+    rng = np.random.default_rng(s * P)
+    x = (np.sin(0.02 * np.arange(2000)) +
+         0.3 * rng.normal(size=2000)).astype(np.float32)
+    w = np.asarray(sax_words_op(x, s, P, alpha))
+    wr = sax_words(np.asarray(x, np.float64), s, P, alpha)
+    assert np.mean(w == wr) > 0.995       # f32-vs-f64 breakpoint ties
+
+
+def test_zdist_excludes_self_matches():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=800).astype(np.float32)
+    s = 50
+    q = np.arange(100, 120)
+    d, ngh = zdist_min(x, s, q)
+    ngh = np.asarray(ngh)
+    assert np.all(np.abs(ngh - q) >= s)

@@ -1,0 +1,55 @@
+"""Sequitur + RRA baseline tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serial.sequitur import sequitur
+from repro.core import find_discords
+
+
+@settings(max_examples=50, deadline=None)
+@given(tokens=st.lists(st.integers(0, 5), min_size=1, max_size=300))
+def test_sequitur_roundtrip(tokens):
+    g = sequitur(tokens)
+    assert g.expand_tokens() == [int(t) for t in tokens]
+
+
+@settings(max_examples=20, deadline=None)
+@given(tokens=st.lists(st.integers(0, 3), min_size=4, max_size=200))
+def test_sequitur_digram_uniqueness(tokens):
+    """No digram occurs twice anywhere in the grammar — except
+    OVERLAPPING occurrences (aaa), which Sequitur explicitly exempts."""
+    g = sequitur(tokens)
+    seen = {}
+    for rid, rule in g._index_rules().items():
+        syms = rule.symbols()
+        for pos, (a, b) in enumerate(zip(syms[:-1], syms[1:])):
+            key = (a.key(), b.key())
+            if key in seen:
+                prid, ppos = seen[key]
+                # same rule, adjacent position, self-similar digram
+                # (xx) -> overlapping occurrence, allowed
+                overlapping = (prid == rid and pos - ppos == 1
+                               and a.key() == b.key())
+                assert overlapping, (key, prid, ppos, rid, pos)
+            seen[key] = (rid, pos)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tokens=st.lists(st.integers(0, 3), min_size=4, max_size=200))
+def test_sequitur_rule_utility(tokens):
+    """Every non-start rule is referenced at least twice."""
+    g = sequitur(tokens)
+    refs = {}
+    for rule in g._index_rules().values():
+        for s in rule.symbols():
+            if s.rule is not None:
+                refs[s.rule.id] = refs.get(s.rule.id, 0) + 1
+    for rid, cnt in refs.items():
+        assert cnt >= 2, (rid, cnt)
+
+
+def test_rra_runs_and_is_exact_with_verification(anomalous_series):
+    x, _ = anomalous_series
+    ref = find_discords(x, 64, 1, method="brute")
+    r = find_discords(x, 64, 1, method="rra")
+    assert r.positions == ref.positions

@@ -1,0 +1,52 @@
+"""SAX layer: breakpoints, PAA, cluster-table invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sax import SaxTable, gaussian_breakpoints, paa, sax_words
+
+
+def test_breakpoints_monotone_and_sized():
+    for a in (2, 3, 4, 8, 16):
+        bp = gaussian_breakpoints(a)
+        assert bp.shape == (a - 1,)
+        assert np.all(np.diff(bp) > 0)
+    assert gaussian_breakpoints(4)[1] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_paa_requires_divisibility():
+    x = np.random.default_rng(0).normal(size=200)
+    with pytest.raises(ValueError):
+        paa(x, 10, 3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), s=st.sampled_from([8, 12, 16]),
+       P=st.sampled_from([2, 4]), alpha=st.sampled_from([3, 4, 6]))
+def test_sax_table_partitions(seed, s, P, alpha):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=300)
+    table = SaxTable(x, s, P, alpha)
+    n = x.shape[0] - s + 1
+    # clusters partition [0, n)
+    members = np.concatenate([m for m in table.clusters.values()])
+    assert sorted(members.tolist()) == list(range(n))
+    # per-sequence size bookkeeping agrees
+    for w, m in table.clusters.items():
+        assert np.all(table.cluster_size[m] == m.size)
+    # size ordering smallest -> largest
+    sizes = [table.clusters[k].size for k in table.keys_by_size]
+    assert sizes == sorted(sizes)
+
+
+def test_paa_znormalized_windows():
+    """PAA of a z-normalized window must average to ~0."""
+    x = np.random.default_rng(3).normal(size=500)
+    pa = paa(x, 16, 4)
+    assert np.allclose(pa.mean(axis=1), 0.0, atol=1e-6)
+
+
+def test_words_in_range():
+    x = np.random.default_rng(4).normal(size=400)
+    w = sax_words(x, 12, 4, 4)
+    assert w.min() >= 0 and w.max() < 4 ** 4
