@@ -3,11 +3,13 @@
 Layers:
   * windows / distance / sax   — shared primitives (Eq. 1/2/3, PAA, SAX)
   * serial/                    — paper-faithful counted implementations
+  * tiles                      — unified distance-tile engine (pluggable
+                                 numpy | xla | pallas backends)
   * hst_jax / matrix_profile   — TPU-native blocked JAX implementations
   * distributed                — shard_map multi-pod discord search
-  * api.find_discords          — single entrypoint
+  * api.find_discords{,_batched} — single entrypoints
 """
-from .api import find_discords
+from .api import find_discords, find_discords_batched
 from .result import DiscordResult
 
-__all__ = ["find_discords", "DiscordResult"]
+__all__ = ["find_discords", "find_discords_batched", "DiscordResult"]

@@ -1,30 +1,42 @@
-"""Public discord-search entrypoint.
+"""Public discord-search entrypoints.
 
 ``find_discords`` dispatches between the paper-faithful serial
 implementations (exact call counting — the reproduction plane) and the
-TPU-native JAX implementations (the performance plane).
+TPU-native JAX implementations (the performance plane).  All JAX
+methods share one distance-tile engine (``core/tiles``) whose backend
+(``numpy`` | ``xla`` | ``pallas``) is selected with ``backend=``, the
+``REPRO_TILE_BACKEND`` env var, or hardware auto-detection.
+
+``find_discords_batched`` is the serving-plane front door: one
+compiled search over a stack of equal-length monitored streams.
 """
 from __future__ import annotations
 
-from typing import Optional
+import time
+from typing import List, Optional
 
 import numpy as np
 
 from .result import DiscordResult
 
 _SERIAL = ("brute", "hotsax", "hst", "dadd", "rra")
-_JAX = ("hst_jax", "matrix_profile", "distributed")
+_JAX = ("hst_jax", "matrix_profile", "distributed", "drag")
 
 
 def find_discords(series: np.ndarray, s: int, k: int = 1, *,
                   method: str = "hst", P: int = 4, alpha: int = 4,
                   seed: int = 0, r: Optional[float] = None,
-                  znorm: bool = True, **kw) -> DiscordResult:
+                  znorm: bool = True, backend: Optional[str] = None,
+                  **kw) -> DiscordResult:
     """Find the top-k discords of a 1-D series.
 
     method:
       serial (counted, paper-faithful): brute | hotsax | hst | dadd | rra
-      jax (TPU-native, blocked):        hst_jax | matrix_profile
+      jax (TPU-native, blocked):        hst_jax | matrix_profile |
+                                        distributed | drag
+
+    ``backend`` picks the distance-tile backend for the jax methods
+    (``numpy`` | ``xla`` | ``pallas``); serial methods ignore it.
 
     ``znorm=False`` switches to raw Euclidean windows (DADD's
     convention, paper Sec 4.4) — used by the telemetry monitor where
@@ -52,9 +64,52 @@ def find_discords(series: np.ndarray, s: int, k: int = 1, *,
         return rra(series, s, k, P=P, alpha=alpha, seed=seed)
     if method == "hst_jax":
         from .hst_jax import hst_jax
-        return hst_jax(series, s, k, P=P, alpha=alpha, seed=seed, **kw)
+        return hst_jax(series, s, k, P=P, alpha=alpha, seed=seed,
+                       backend=backend, **kw)
     if method == "matrix_profile":
         from .matrix_profile import discords_via_matrix_profile
-        return discords_via_matrix_profile(series, s, k, **kw)
+        return discords_via_matrix_profile(series, s, k,
+                                           backend=backend, **kw)
+    if method == "distributed":
+        from .distributed import distributed_discords
+        return distributed_discords(series, s, k, backend=backend, **kw)
+    if method == "drag":
+        from .distributed import drag_discords
+        return drag_discords(series, s, k, r=r, seed=seed,
+                             backend=backend, **kw)
     raise ValueError(
         f"unknown method {method!r}; pick one of {_SERIAL + _JAX}")
+
+
+def find_discords_batched(series_batch, s: int, k: int = 1, *,
+                          block: int = 256,
+                          backend: Optional[str] = None
+                          ) -> List[DiscordResult]:
+    """Top-k discords of every series in a (B, L) stack — one search.
+
+    The batched front door for the serving/telemetry plane: the whole
+    stack goes through one compiled tile-engine sweep (vmapped on the
+    ``xla`` backend, scanned per series on ``pallas``/``numpy``), then
+    each series' exact profile is reduced to its top-k non-overlapping
+    maxima.  Per-series results match ``find_discords(...,
+    method="matrix_profile")`` run serially on each member.
+    """
+    from .tiles import batched_profile, resolve_backend, \
+        topk_nonoverlapping
+    t0 = time.perf_counter()
+    backend = resolve_backend(backend)
+    d2b, _argb = batched_profile(series_batch, s, block=block,
+                                 backend=backend)
+    profs = np.sqrt(np.asarray(d2b, np.float64))
+    elapsed = time.perf_counter() - t0
+    n = profs.shape[1]
+    out: List[DiscordResult] = []
+    for b in range(profs.shape[0]):
+        pos, vals = topk_nonoverlapping(profs[b], k, s)
+        out.append(DiscordResult(
+            positions=pos, nnds=vals, calls=n * n, n=n, s=s,
+            method=f"batched_mp[{backend}]",
+            runtime_s=elapsed / profs.shape[0],
+            extra={"batch_size": int(profs.shape[0]),
+                   "batch_index": b, "backend": backend}))
+    return out

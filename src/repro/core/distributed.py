@@ -40,8 +40,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .result import DiscordResult
+from .tiles import (TileBlock, resolve_backend, tile_d2, tile_mins,
+                    topk_nonoverlapping)
 
 AXIS = "shard"
+
+# older jax has no lax.pvary (newer strict-replication checker needs it)
+_pvary = getattr(lax, "pvary", lambda x, axes: x)
 
 
 def data_mesh(ndev: Optional[int] = None) -> Mesh:
@@ -53,17 +58,14 @@ def data_mesh(ndev: Optional[int] = None) -> Mesh:
 
 
 # ----------------------------------------------------------------------
-# shared tile math (Eq. 3 on a q-block x c-block tile)
+# shared tile math (Eq. 3 on a q-block x c-block tile) — routed through
+# the pluggable distance-tile engine; the ring only moves the blocks
 # ----------------------------------------------------------------------
-def _tile_d2(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, s, n):
-    dots = jax.lax.dot_general(qwin, cwin, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-    corr = (dots - s * qmu[:, None] * cmu[None, :]) / (
-        s * qsig[:, None] * csig[None, :])
-    d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
-    bad = (jnp.abs(qid[:, None] - cid[None, :]) < s) \
-        | (cid[None, :] >= n) | (qid[:, None] >= n)
-    return jnp.where(bad, jnp.inf, d2)
+def _tile_d2(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, s, n,
+             backend: str):
+    return tile_d2(TileBlock(qwin, qmu, qsig, qid),
+                   TileBlock(cwin, cmu, csig, cid),
+                   s=s, n_valid=n, backend=backend)
 
 
 def _pack_blocks(series: np.ndarray, s: int, ndev: int):
@@ -87,16 +89,18 @@ def _pack_blocks(series: np.ndarray, s: int, ndev: int):
 # ----------------------------------------------------------------------
 # 1) ring matrix profile
 # ----------------------------------------------------------------------
-def _ring_mp_shard(qwin, qmu, qsig, qid, s: int, n: int, ndev: int):
+def _ring_mp_shard(qwin, qmu, qsig, qid, s: int, n: int, ndev: int,
+                   backend: str):
     """Per-shard body: local queries fixed; candidates orbit the ring."""
     me = lax.axis_index(AXIS)
     perm = [(i, (i + 1) % ndev) for i in range(ndev)]
 
     def hop(carry, _):
         cwin, cmu, csig, cid, best, barg = carry
-        d2 = _tile_d2(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, s, n)
-        tmin = jnp.min(d2, axis=1)
-        targ = cid[jnp.argmin(d2, axis=1)]
+        d2 = _tile_d2(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, s, n,
+                      backend)
+        m = tile_mins(d2, qid, cid)        # col outputs DCE'd, unused
+        tmin, targ = m.row_min, m.row_arg
         take = tmin < best
         best = jnp.where(take, tmin, best)
         barg = jnp.where(take, targ, barg)
@@ -107,28 +111,33 @@ def _ring_mp_shard(qwin, qmu, qsig, qid, s: int, n: int, ndev: int):
         return (cwin, cmu, csig, cid, best, barg), None
 
     init = (qwin, qmu, qsig, qid,
-            lax.pvary(jnp.full(qwin.shape[0], jnp.inf, jnp.float32),
-                      (AXIS,)),
-            lax.pvary(jnp.full(qwin.shape[0], -1, jnp.int32), (AXIS,)))
+            _pvary(jnp.full(qwin.shape[0], jnp.inf, jnp.float32),
+                   (AXIS,)),
+            _pvary(jnp.full(qwin.shape[0], -1, jnp.int32), (AXIS,)))
     (_w, _mu, _sg, _id, best, barg), _ = lax.scan(hop, init, None,
                                                   length=ndev)
     del _w, _mu, _sg, _id, me
     return best, barg
 
 
-def ring_matrix_profile(series, s: int, *, mesh: Optional[Mesh] = None
+def ring_matrix_profile(series, s: int, *, mesh: Optional[Mesh] = None,
+                        backend: Optional[str] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact distributed matrix profile: (nnd, neighbor) per window."""
     mesh = mesh or data_mesh()
     ndev = mesh.devices.size
+    backend = resolve_backend(backend)
     win, mu, sig, ids, n, per = _pack_blocks(series, s, ndev)
     sh = NamedSharding(mesh, P(AXIS))
     sh2 = NamedSharding(mesh, P(AXIS, None))
 
-    body = functools.partial(_ring_mp_shard, s=s, n=n, ndev=ndev)
+    body = functools.partial(_ring_mp_shard, s=s, n=n, ndev=ndev,
+                             backend=backend)
+    # check_rep=False: pallas_call has no replication rule, and the
+    # tile backend must stay selectable inside the shard body
     f = shard_map(body, mesh=mesh,
                   in_specs=(P(AXIS, None), P(AXIS), P(AXIS), P(AXIS)),
-                  out_specs=(P(AXIS), P(AXIS)))
+                  out_specs=(P(AXIS), P(AXIS)), check_rep=False)
     f = jax.jit(f)
     d2, arg = f(jax.device_put(win, sh2), jax.device_put(mu, sh),
                 jax.device_put(sig, sh), jax.device_put(ids, sh))
@@ -139,7 +148,8 @@ def ring_matrix_profile(series, s: int, *, mesh: Optional[Mesh] = None
 # ----------------------------------------------------------------------
 # 2) DRAG two-phase distributed discord search
 # ----------------------------------------------------------------------
-def _drag_shard(qwin, qmu, qsig, qid, r: float, s: int, n: int, ndev: int):
+def _drag_shard(qwin, qmu, qsig, qid, r: float, s: int, n: int,
+                ndev: int, backend: str):
     """Phase-1 body: ring sweep with block-level abandonment at ``r``.
 
     A query whose running nnd drops below ``r`` is dead; once every
@@ -155,9 +165,9 @@ def _drag_shard(qwin, qmu, qsig, qid, r: float, s: int, n: int, ndev: int):
         def live_tile(args):
             best, barg = args
             d2 = _tile_d2(qwin, qmu, qsig, qid, cwin, cmu, csig, cid,
-                          s, n)
-            tmin = jnp.min(d2, axis=1)
-            targ = cid[jnp.argmin(d2, axis=1)]
+                          s, n, backend)
+            m = tile_mins(d2, qid, cid)
+            tmin, targ = m.row_min, m.row_arg
             take = tmin < best
             return jnp.where(take, tmin, best), \
                 jnp.where(take, targ, barg)
@@ -172,18 +182,18 @@ def _drag_shard(qwin, qmu, qsig, qid, r: float, s: int, n: int, ndev: int):
         return (cwin, cmu, csig, cid, best, barg, alive), None
 
     init = (qwin, qmu, qsig, qid,
-            lax.pvary(jnp.full(qwin.shape[0], jnp.inf, jnp.float32),
-                      (AXIS,)),
-            lax.pvary(jnp.full(qwin.shape[0], -1, jnp.int32), (AXIS,)),
-            lax.pvary(jnp.ones(qwin.shape[0], bool), (AXIS,)))
+            _pvary(jnp.full(qwin.shape[0], jnp.inf, jnp.float32),
+                   (AXIS,)),
+            _pvary(jnp.full(qwin.shape[0], -1, jnp.int32), (AXIS,)),
+            _pvary(jnp.ones(qwin.shape[0], bool), (AXIS,)))
     carry, _ = lax.scan(hop, init, None, length=ndev)
     _, _, _, _, best, barg, alive = carry
     return best, barg, alive
 
 
 def drag_discords(series, s: int, k: int = 1, *, r: Optional[float] = None,
-                  mesh: Optional[Mesh] = None, seed: int = 0
-                  ) -> DiscordResult:
+                  mesh: Optional[Mesh] = None, seed: int = 0,
+                  backend: Optional[str] = None) -> DiscordResult:
     """Distributed DRAG: threshold sweep then exact ranking.
 
     ``r`` defaults to the paper's sampling recipe (Sec 4.4): exact
@@ -194,6 +204,7 @@ def drag_discords(series, s: int, k: int = 1, *, r: Optional[float] = None,
     t0 = time.perf_counter()
     mesh = mesh or data_mesh()
     ndev = mesh.devices.size
+    backend = resolve_backend(backend)
     if r is None:
         from .serial.dadd import pick_r_by_sampling
         r = 0.99 * pick_r_by_sampling(np.asarray(series, np.float64), s,
@@ -207,24 +218,16 @@ def drag_discords(series, s: int, k: int = 1, *, r: Optional[float] = None,
     retries = 0
     while True:
         body = functools.partial(_drag_shard, r=float(r), s=s, n=n,
-                                 ndev=ndev)
+                                 ndev=ndev, backend=backend)
         f = jax.jit(shard_map(
             body, mesh=mesh,
             in_specs=(P(AXIS, None), P(AXIS), P(AXIS), P(AXIS)),
-            out_specs=(P(AXIS), P(AXIS), P(AXIS))))
+            out_specs=(P(AXIS), P(AXIS), P(AXIS)), check_rep=False))
         d2, arg, alive = f(*args)
         d = np.sqrt(np.asarray(d2)[:n])
         alive = np.asarray(alive)[:n]
         prof = np.where(alive, d, -np.inf)
-        pos, vals = [], []
-        p = prof.copy()
-        for _ in range(k):
-            i = int(np.argmax(p))
-            if not np.isfinite(p[i]):
-                break
-            pos.append(i)
-            vals.append(float(p[i]))
-            p[max(0, i - s + 1):min(n, i + s)] = -np.inf
+        pos, vals = topk_nonoverlapping(prof, k, s)
         if len(pos) >= k or r <= 1e-6 or retries >= 6:
             break
         r = r / 2.0           # self-healing re-run (paper Sec 4.4)
@@ -240,21 +243,14 @@ def drag_discords(series, s: int, k: int = 1, *, r: Optional[float] = None,
 
 
 def distributed_discords(series, s: int, k: int = 1, *,
-                         mesh: Optional[Mesh] = None) -> DiscordResult:
+                         mesh: Optional[Mesh] = None,
+                         backend: Optional[str] = None) -> DiscordResult:
     """Exact k discords from the ring matrix profile (SCAMP-class)."""
     t0 = time.perf_counter()
     mesh = mesh or data_mesh()
-    d, arg = ring_matrix_profile(series, s, mesh=mesh)
+    d, arg = ring_matrix_profile(series, s, mesh=mesh, backend=backend)
     n = d.shape[0]
-    pos, vals = [], []
-    p = d.copy()
-    for _ in range(k):
-        i = int(np.argmax(p))
-        if not np.isfinite(p[i]):
-            break
-        pos.append(i)
-        vals.append(float(p[i]))
-        p[max(0, i - s + 1):min(n, i + s)] = -np.inf
+    pos, vals = topk_nonoverlapping(d, k, s)
     return DiscordResult(positions=pos, nnds=vals, calls=n * n, n=n, s=s,
                          method=f"ring_mp[{mesh.devices.size}dev]",
                          runtime_s=time.perf_counter() - t0)

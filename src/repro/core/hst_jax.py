@@ -34,6 +34,7 @@ import numpy as np
 from jax import lax
 
 from .result import DiscordResult
+from .tiles import TileEngine, pair_d2
 
 NND_INIT = jnp.float32(3.4e38)
 CHUNK = 8192          # pair-distance chunking for lax.map
@@ -42,16 +43,6 @@ CHUNK = 8192          # pair-distance chunking for lax.map
 # ----------------------------------------------------------------------
 # primitives
 # ----------------------------------------------------------------------
-def _stats(series, s: int):
-    x = series.astype(jnp.float32)
-    n = x.shape[0] - s + 1
-    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
-    csum2 = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x * x)])
-    mu = (csum[s:s + n] - csum[:n]) / s
-    var = jnp.maximum((csum2[s:s + n] - csum2[:n]) / s - mu * mu, 0.0)
-    return mu, jnp.maximum(jnp.sqrt(var), 1e-10)
-
-
 def _gather_windows(series_pad, ids, s: int):
     """(B, s) windows at arbitrary (clipped) ids."""
     idx = ids[:, None] + jnp.arange(s)[None, :]
@@ -64,11 +55,8 @@ def _pair_d2_chunk(series_pad, mu_pad, sig_pad, s: int, a, b, valid):
     b_ = jnp.clip(b, 0)
     wa = _gather_windows(series_pad, a_, s)
     wb = _gather_windows(series_pad, b_, s)
-    dots = jnp.sum(wa * wb, axis=1)
-    corr = (dots - s * mu_pad[a_] * mu_pad[b_]) / (
-        s * sig_pad[a_] * sig_pad[b_])
-    d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
-    return jnp.where(valid, d2, jnp.inf)
+    return pair_d2(wa, wb, mu_pad[a_], sig_pad[a_], mu_pad[b_],
+                   sig_pad[b_], s, valid=valid)
 
 
 def _pair_d2(series_pad, mu_pad, sig_pad, s: int, a, b, valid):
@@ -88,16 +76,26 @@ def _pair_d2(series_pad, mu_pad, sig_pad, s: int, a, b, valid):
 
 
 def _scatter_min(nnd, ngh, idx, d, src):
-    """nnd[idx] = min(nnd[idx], d); ngh follows the winning updates."""
+    """nnd[idx] = min(nnd[idx], d); ngh follows, deterministically.
+
+    (nnd, ngh) stay a consistent pair under ties: ngh[i] changes only
+    when nnd[i] strictly improves in this scatter, and among updates
+    tying at the new minimum the smallest source index wins — an
+    order-independent rule, unlike a plain ``.set`` whose winner is
+    whichever duplicate the scatter applies last.
+    """
     n = nnd.shape[0]
     safe = jnp.clip(idx, 0, n - 1)
     live = (idx >= 0) & (idx < n) & jnp.isfinite(d)
     tgt = jnp.where(live, safe, n)              # sentinel row n
     nnd_ext = jnp.append(nnd, NND_INIT)
     nnd_new = nnd_ext.at[tgt].min(d)[:n]
-    won = live & (d <= nnd_new[safe])
-    ngh_ext = jnp.append(ngh, jnp.int32(-1))
-    ngh_new = ngh_ext.at[jnp.where(won, safe, n)].set(src)[:n]
+    improved = nnd_new[safe] < nnd[safe]
+    won = live & improved & (d <= nnd_new[safe])
+    big = jnp.int32(2 ** 30)
+    src_min = jnp.full(n + 1, big, jnp.int32).at[
+        jnp.where(won, safe, n)].min(src.astype(jnp.int32))[:n]
+    ngh_new = jnp.where(src_min < big, src_min, ngh)
     return nnd_new, ngh_new
 
 
@@ -182,22 +180,9 @@ def _long_range(series_pad, mu_pad, sig_pad, s, n, nnd, ngh, cand_ids):
 # ----------------------------------------------------------------------
 # batched verification sweep
 # ----------------------------------------------------------------------
-def _make_verify(series_pad, mu_pad, sig_pad, s, n, block):
-    nb = -(-n // block)
-
-    def tile(qwin, qmu, qsig, qids, c0):
-        buf = lax.dynamic_slice(series_pad, (c0,), (block + s - 1,))
-        cwin = buf[jnp.arange(block)[:, None] + jnp.arange(s)[None, :]]
-        cmu = lax.dynamic_slice(mu_pad, (c0,), (block,))
-        csig = lax.dynamic_slice(sig_pad, (c0,), (block,))
-        dots = qwin @ cwin.T
-        corr = (dots - s * qmu[:, None] * cmu[None, :]) / (
-            s * qsig[:, None] * csig[None, :])
-        d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
-        cid = c0 + jnp.arange(block)
-        bad = (jnp.abs(qids[:, None] - cid[None, :]) < s) \
-            | (cid[None, :] >= n)
-        return jnp.where(bad, jnp.inf, d2), cid
+def _make_verify(eng: TileEngine):
+    """Verification sweep over the shared tile engine (any backend)."""
+    s, n, block, nb = eng.s, eng.n, eng.block, eng.nb
 
     def verify(cand_ids, cand_nnd, best, nnd, ngh, work):
         """Sweep all candidate blocks for a batch; block-level abandon.
@@ -206,8 +191,7 @@ def _make_verify(series_pad, mu_pad, sig_pad, s, n, block):
         work) — survivors' values are exact.
         """
         qids = jnp.clip(cand_ids, 0, n - 1)
-        qwin = _gather_windows(series_pad, qids, s)
-        qmu, qsig = mu_pad[qids], sig_pad[qids]
+        qblk = eng.query_block(qids)
         B = cand_ids.shape[0]
         cur = cand_nnd                       # upper bounds to start
         cur_ngh = ngh[qids]
@@ -215,7 +199,7 @@ def _make_verify(series_pad, mu_pad, sig_pad, s, n, block):
 
         def body(state):
             blk, cur, cur_ngh, alive, nnd, ngh, work = state
-            d2, cid = tile(qwin, qmu, qsig, qids, blk * block)
+            d2, cid = eng.sweep(qblk, blk * block)
             d = jnp.sqrt(d2)
             # row mins -> candidates
             row_min = jnp.min(d, axis=1)
@@ -250,25 +234,21 @@ def _make_verify(series_pad, mu_pad, sig_pad, s, n, block):
 # ----------------------------------------------------------------------
 @functools.partial(jax.jit,
                    static_argnames=("s", "k", "P", "alpha", "block",
-                                    "batch", "use_long_range"))
+                                    "batch", "use_long_range", "backend"))
 def _hst_jax_impl(series, words, key, *, s, k, P, alpha, block, batch,
-                  use_long_range):
-    n = series.shape[0] - s + 1
-    mu, sig = _stats(series, s)
-    nb = -(-n // block)
-    # pad so every dynamic slice stays in bounds
-    L_need = nb * block + s - 1
-    series_pad = jnp.pad(series.astype(jnp.float32),
-                         (0, max(0, L_need - series.shape[0])))
-    mu_pad = jnp.pad(mu, (0, nb * block - n))
-    sig_pad = jnp.pad(sig, (0, nb * block - n), constant_values=1.0)
+                  use_long_range, backend):
+    # the engine owns padding/stats so every dynamic slice stays in
+    # bounds; all tile math below dispatches through its backend
+    eng = TileEngine(series, s, block=block, backend=backend)
+    n = eng.n
+    series_pad, mu_pad, sig_pad = eng.series_pad, eng.mu_pad, eng.sig_pad
 
     sizes = _cluster_sizes(words)
     nnd, ngh = _warm_up(series_pad, mu_pad, sig_pad, s, n, words, sizes,
                         key)
     nnd, ngh = _short_range(series_pad, mu_pad, sig_pad, s, n, nnd, ngh)
     smoothed = _smooth(nnd, s)
-    verify = _make_verify(series_pad, mu_pad, sig_pad, s, n, block)
+    verify = _make_verify(eng)
 
     active = jnp.ones(n, bool)
     verified = jnp.zeros(n, bool)
@@ -350,9 +330,17 @@ def _hst_jax_impl(series, words, key, *, s, k, P, alpha, block, batch,
 
 def hst_jax(series, s: int, k: int = 1, *, P: int = 4, alpha: int = 4,
             seed: int = 0, block: int = 512, batch: int = 8,
-            use_long_range: bool = True) -> DiscordResult:
-    """TPU-native blocked HST.  Exact discords, block-granular work."""
+            use_long_range: bool = True,
+            backend: str | None = None) -> DiscordResult:
+    """TPU-native blocked HST.  Exact discords, block-granular work.
+
+    ``backend`` selects the distance-tile implementation for the
+    verification sweeps (``numpy`` | ``xla`` | ``pallas``); defaults to
+    the registry's resolution order (env var, then hardware).
+    """
     t0 = time.perf_counter()
+    from .tiles import resolve_backend
+    backend = resolve_backend(backend)
     series = jnp.asarray(np.asarray(series), jnp.float32)
     from .sax import sax_words                     # float64 SAX (host)
     words = jnp.asarray(sax_words(np.asarray(series, np.float64), s, P,
@@ -363,11 +351,12 @@ def hst_jax(series, s: int, k: int = 1, *, P: int = 4, alpha: int = 4,
     key = jax.random.PRNGKey(seed)
     pos, val, work = _hst_jax_impl(
         series, words, key, s=s, k=k, P=P, alpha=alpha, block=block,
-        batch=batch, use_long_range=use_long_range)
+        batch=batch, use_long_range=use_long_range, backend=backend)
     pos = np.asarray(pos)
     val = np.asarray(val)
     n = series.shape[0] - s + 1
     return DiscordResult(positions=pos.tolist(), nnds=val.tolist(),
                          calls=int(work), n=n, s=s, method="hst_jax",
                          runtime_s=time.perf_counter() - t0,
-                         extra={"block": block, "batch": batch})
+                         extra={"block": block, "batch": batch,
+                                "backend": backend})

@@ -1,9 +1,12 @@
 """Exact matrix profile in JAX — the SCAMP-class baseline (Fig. 6).
 
-Two backends:
-  * ``jnp``    — blocked lax.map sweep (fast on CPU, used by benches)
+All tile math routes through the shared distance-tile engine
+(``core/tiles.TileEngine``), so the backend is pluggable:
+  * ``xla``    — blocked lax.map sweep (fast on CPU, used by benches)
   * ``pallas`` — kernels/mpblock (series-resident Hankel tiles; the TPU
                  target, validated in interpret mode)
+  * ``numpy``  — host reference (parity tests)
+``backend="jnp"`` is kept as a legacy alias of ``xla``.
 
 Also exposes ``discords_via_matrix_profile`` so SCAMP can answer the
 same k-discord question as the other algorithms (profile -> top-k
@@ -17,73 +20,43 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from .result import DiscordResult
+from .tiles import TileEngine, resolve_backend, topk_nonoverlapping
 
 
-@functools.partial(jax.jit, static_argnames=("s", "block"))
-def _mp_jnp(series, *, s, block):
-    x = jnp.asarray(series, jnp.float32)
-    n = x.shape[0] - s + 1
-    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
-    csum2 = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x * x)])
-    mu = (csum[s:s + n] - csum[:n]) / s
-    var = jnp.maximum((csum2[s:s + n] - csum2[:n]) / s - mu * mu, 0.0)
-    sig = jnp.maximum(jnp.sqrt(var), 1e-10)
-
-    nb = -(-n // block)
-    L_need = nb * block + s - 1
-    x_pad = jnp.pad(x, (0, max(0, L_need - x.shape[0])))
-    win = x_pad[jnp.arange(n)[:, None] + jnp.arange(s)[None, :]]  # (N, s)
-
-    def one_block(b0):
-        buf = lax.dynamic_slice(x_pad, (b0,), (block + s - 1,))
-        qwin = buf[jnp.arange(block)[:, None] + jnp.arange(s)[None, :]]
-        qid = b0 + jnp.arange(block)
-        qmu_v = jnp.where(qid < n, mu[jnp.clip(qid, 0, n - 1)], 0.0)
-        qsig_v = jnp.where(qid < n, sig[jnp.clip(qid, 0, n - 1)], 1.0)
-        dots = qwin @ win.T                                  # (block, N)
-        corr = (dots - s * qmu_v[:, None] * mu[None, :]) / (
-            s * qsig_v[:, None] * sig[None, :])
-        d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
-        cid = jnp.arange(n)[None, :]
-        bad = jnp.abs(qid[:, None] - cid) < s
-        d2 = jnp.where(bad, jnp.inf, d2)
-        return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(
-            jnp.int32)
-
-    d2b, argb = lax.map(one_block, jnp.arange(nb) * block)
-    return d2b.reshape(-1)[:n], argb.reshape(-1)[:n]
+@functools.partial(jax.jit,
+                   static_argnames=("s", "block", "backend", "interpret"))
+def _mp_jit(series, *, s, block, backend, interpret):
+    eng = TileEngine(series, s, block=block, backend=backend)
+    return eng.profile(interpret=interpret)
 
 
 def matrix_profile_jax(series, s: int, *, block: int = 256,
-                       backend: str = "jnp"):
-    """(nnd, neighbor) arrays for every window."""
-    if backend == "pallas":
-        from ..kernels.mpblock.ops import matrix_profile as mp_pallas
-        return mp_pallas(series, s)
-    d2, arg = _mp_jnp(jnp.asarray(np.asarray(series), jnp.float32),
-                      s=s, block=block)
+                       backend: str | None = None,
+                       interpret: bool | None = None):
+    """(nnd, neighbor) arrays for every window.
+
+    ``interpret`` is a pallas-only debug override (see
+    ``TileEngine.profile``).
+    """
+    backend = resolve_backend(backend)
+    d2, arg = _mp_jit(jnp.asarray(np.asarray(series), jnp.float32),
+                      s=s, block=block, backend=backend,
+                      interpret=interpret)
     return jnp.sqrt(d2), arg
 
 
 def discords_via_matrix_profile(series, s: int, k: int = 1, *,
-                                block: int = 256, backend: str = "jnp"
+                                block: int = 256,
+                                backend: str | None = None
                                 ) -> DiscordResult:
     t0 = time.perf_counter()
+    backend = resolve_backend(backend)
     d, arg = matrix_profile_jax(series, s, block=block, backend=backend)
     prof = np.asarray(d, np.float64)
     n = prof.shape[0]
-    pos, vals = [], []
-    p = prof.copy()
-    for _ in range(k):
-        i = int(np.argmax(p))
-        if not np.isfinite(p[i]):
-            break
-        pos.append(i)
-        vals.append(float(p[i]))
-        p[max(0, i - s + 1):min(n, i + s)] = -np.inf
+    pos, vals = topk_nonoverlapping(prof, k, s)
     return DiscordResult(positions=pos, nnds=vals,
                          calls=n * n,           # SCAMP's O(N^2) work model
                          n=n, s=s, method=f"scamp[{backend}]",

@@ -1,0 +1,260 @@
+"""Unified distance-tile engine — one tile plane for every search.
+
+The paper's whole cost model collapses onto Eq. (3) z-normalized
+distance evaluations; this module is the single implementation of that
+hot spot that all search strategies share:
+
+  * ``hst_jax``            — batched verification sweeps (``sweep``)
+  * ``distributed``        — ring matrix profile / DRAG (``tile_d2``)
+  * ``matrix_profile``     — SCAMP-class baseline (``profile``)
+  * ``find_discords_batched`` — multi-series serving plane
+                              (``batched_profile``)
+
+The actual tile math lives behind the pluggable backend registry in
+``repro.kernels.registry`` (``numpy`` | ``xla`` | ``pallas``); this
+module owns the *data plane*: window gathering, contiguous Hankel
+blocks, padding, stats, min/argmin reductions, and top-k extraction.
+
+Data model: a ``TileBlock`` is a block of windows with per-window stats
+and *global* window ids (ids outside [0, n_valid) are padding and come
+back masked to +inf).  A ``TileEngine`` wraps one series and hands out
+blocks whose padding invariants match what the backends expect.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels.common import ceil_div, default_interpret, sliding_stats_jnp
+from ..kernels.registry import (available_backends, get_backend,
+                                register_backend, resolve_backend)
+
+__all__ = [
+    "TileBlock", "TileMins", "TileEngine", "tile_d2", "tile_mins",
+    "pair_d2", "topk_nonoverlapping", "batched_profile",
+    "resolve_backend", "available_backends", "register_backend",
+]
+
+
+class TileBlock(NamedTuple):
+    """A block of windows + stats + global ids (padding ids < 0)."""
+    win: jnp.ndarray    # (B, s) f32
+    mu: jnp.ndarray     # (B,)   f32
+    sig: jnp.ndarray    # (B,)   f32
+    ids: jnp.ndarray    # (B,)   i32; <0 or >= n_valid -> masked
+
+
+class TileMins(NamedTuple):
+    row_min: jnp.ndarray   # (Bq,) min d2 per query row
+    row_arg: jnp.ndarray   # (Bq,) candidate id realizing it
+    col_min: jnp.ndarray   # (Bc,) min d2 per candidate column
+    col_arg: jnp.ndarray   # (Bc,) query id realizing it
+
+
+def tile_d2(q: TileBlock, c: TileBlock, *, s: int, n_valid: int,
+            backend: Optional[str] = None) -> jnp.ndarray:
+    """Masked (Bq, Bc) squared-distance tile via the selected backend."""
+    fn = get_backend(resolve_backend(backend))
+    return fn(q.win, q.mu, q.sig, q.ids, c.win, c.mu, c.sig, c.ids,
+              s=s, n_valid=n_valid)
+
+
+def tile_mins(d2: jnp.ndarray, qids, cids) -> TileMins:
+    """Row/col (min, argmin) of a d2 tile, in global-id space."""
+    return TileMins(
+        row_min=jnp.min(d2, axis=1),
+        row_arg=cids[jnp.argmin(d2, axis=1)],
+        col_min=jnp.min(d2, axis=0),
+        col_arg=qids[jnp.argmin(d2, axis=0)],
+    )
+
+
+def pair_d2(wa, wb, mu_a, sig_a, mu_b, sig_b, s: int, valid=None):
+    """Row-wise Eq. (3): d2 between paired windows (B, s) x (B, s).
+
+    The 1-D sibling of the tile — used by HST's chained warm-up and
+    topology passes where pairs are scattered, not blocked.
+    """
+    dots = jnp.sum(wa * wb, axis=1)
+    corr = (dots - s * mu_a * mu_b) / (s * sig_a * sig_b)
+    d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+    if valid is not None:
+        d2 = jnp.where(valid, d2, jnp.inf)
+    return d2
+
+
+def topk_nonoverlapping(profile: np.ndarray, k: int, s: int
+                        ) -> Tuple[list, list]:
+    """Host-side top-k maxima of a profile under the non-overlap rule."""
+    p = np.asarray(profile, np.float64).copy()
+    n = p.shape[0]
+    pos, vals = [], []
+    for _ in range(k):
+        i = int(np.argmax(p))
+        if not np.isfinite(p[i]):
+            break
+        pos.append(i)
+        vals.append(float(p[i]))
+        p[max(0, i - s + 1):min(n, i + s)] = -np.inf
+    return pos, vals
+
+
+# ----------------------------------------------------------------------
+# engine
+# ----------------------------------------------------------------------
+class TileEngine:
+    """Tile data plane for one series (jit/vmap-safe: jnp ops only).
+
+    Owns the padded series / per-window stats and hands out
+    ``TileBlock``s; every distance evaluation dispatches through the
+    backend registry.  ``block`` is the candidate tile side; the
+    series is padded so that every contiguous block's Hankel build
+    stays in bounds (nb * block + s - 1 samples).
+    """
+
+    def __init__(self, series, s: int, *, block: int = 256,
+                 backend: Optional[str] = None):
+        self.s = int(s)
+        self.block = int(block)
+        self.backend = resolve_backend(backend)
+        x = jnp.asarray(series, jnp.float32)
+        self.n = x.shape[0] - self.s + 1
+        self.nb = ceil_div(self.n, self.block)
+        n_pad = self.nb * self.block
+        L_need = n_pad + self.s - 1
+        self.series_pad = jnp.pad(x, (0, max(0, L_need - x.shape[0])))
+        mu, sig = sliding_stats_jnp(x, self.s)
+        self.mu_pad = jnp.pad(mu, (0, n_pad - self.n))
+        self.sig_pad = jnp.pad(sig, (0, n_pad - self.n),
+                               constant_values=1.0)
+
+    # -- block constructors -------------------------------------------
+    def query_block(self, ids) -> TileBlock:
+        """Gathered windows at arbitrary ids (clipped for the gather;
+        the *raw* ids are kept so out-of-range lanes mask to +inf)."""
+        ids = jnp.asarray(ids, jnp.int32)
+        safe = jnp.clip(ids, 0, self.n - 1)
+        win = self.series_pad[safe[:, None] + jnp.arange(self.s)[None, :]]
+        return TileBlock(win, self.mu_pad[safe], self.sig_pad[safe], ids)
+
+    def contiguous_block(self, c0) -> TileBlock:
+        """One (block,) contiguous window block at (traced) offset c0."""
+        chunk = lax.dynamic_slice(self.series_pad, (c0,),
+                                  (self.block + self.s - 1,))
+        win = chunk[jnp.arange(self.block)[:, None]
+                    + jnp.arange(self.s)[None, :]]
+        return TileBlock(
+            win,
+            lax.dynamic_slice(self.mu_pad, (c0,), (self.block,)),
+            lax.dynamic_slice(self.sig_pad, (c0,), (self.block,)),
+            c0 + jnp.arange(self.block, dtype=jnp.int32))
+
+    def all_windows(self) -> TileBlock:
+        """Every (padded) window, materialized — candidate side of the
+        blocked full-profile sweep."""
+        n_pad = self.mu_pad.shape[0]
+        win = self.series_pad[jnp.arange(n_pad)[:, None]
+                              + jnp.arange(self.s)[None, :]]
+        return TileBlock(win, self.mu_pad, self.sig_pad,
+                         jnp.arange(n_pad, dtype=jnp.int32))
+
+    # -- tile ops ------------------------------------------------------
+    def d2(self, q: TileBlock, c: TileBlock,
+           backend: Optional[str] = None) -> jnp.ndarray:
+        return tile_d2(q, c, s=self.s, n_valid=self.n,
+                       backend=backend or self.backend)
+
+    def sweep(self, q: TileBlock, c0, *, backend: Optional[str] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """d2 tile of gathered queries vs the contiguous block at c0.
+
+        This is HST's inner-loop shape.  On the ``pallas`` backend the
+        candidate Hankel tile is built in-kernel from the raw chunk
+        (the mpblock VMEM trick); elsewhere the block is materialized
+        and handed to the window-block backend.  Returns (d2, cid).
+        """
+        backend = resolve_backend(backend or self.backend)
+        cid = c0 + jnp.arange(self.block, dtype=jnp.int32)
+        if backend == "pallas":
+            from ..kernels.mpblock.kernel import qvc_block_pallas
+            chunk = lax.dynamic_slice(self.series_pad, (c0,),
+                                      (self.block + self.s - 1,))
+            cmu = lax.dynamic_slice(self.mu_pad, (c0,), (self.block,))
+            csig = lax.dynamic_slice(self.sig_pad, (c0,), (self.block,))
+            d2 = qvc_block_pallas(
+                q.win, q.mu, q.sig, q.ids, chunk, cmu, csig, cid,
+                s=self.s, n_valid=self.n,
+                interpret=default_interpret())
+            return d2, cid
+        return self.d2(q, self.contiguous_block(c0), backend), cid
+
+    # -- full self-join profile ---------------------------------------
+    def profile(self, *, backend: Optional[str] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Exact matrix profile (d2, neighbor) of the whole series.
+
+        ``pallas`` dispatches to the mpblock upper-triangle kernel
+        (series-resident Hankel tiles, row+col accumulators); other
+        backends run a blocked row sweep through the registry.
+        ``interpret`` overrides the pallas interpret-mode auto-detect
+        (debug hook; ignored by the other backends).
+        """
+        backend = resolve_backend(backend or self.backend)
+        if backend == "pallas":
+            from ..kernels.mpblock.kernel import mp_block_pallas
+            if interpret is None:
+                interpret = default_interpret()
+            rmin, rarg, cmin, carg = mp_block_pallas(
+                self.series_pad, self.mu_pad, self.sig_pad, s=self.s,
+                n_valid=self.n, block=self.block, interpret=interpret)
+            take_row = rmin <= cmin
+            d2 = jnp.where(take_row, rmin, cmin)
+            arg = jnp.where(take_row, rarg, carg)
+            return d2[:self.n], arg[:self.n].astype(jnp.int32)
+
+        cand = self.all_windows()
+
+        def one_block(b0):
+            q = self.contiguous_block(b0)
+            d2 = self.d2(q, cand, backend)
+            return (jnp.min(d2, axis=1),
+                    jnp.argmin(d2, axis=1).astype(jnp.int32))
+
+        starts = jnp.arange(self.nb, dtype=jnp.int32) * self.block
+        d2b, argb = lax.map(one_block, starts)
+        return d2b.reshape(-1)[:self.n], argb.reshape(-1)[:self.n]
+
+
+# ----------------------------------------------------------------------
+# batched multi-series plane
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("s", "block", "backend"))
+def _batched_profile_jit(series_batch, *, s, block, backend):
+    def one(x):
+        return TileEngine(x, s, block=block, backend=backend).profile()
+
+    if backend == "xla":
+        return jax.vmap(one)(series_batch)       # one compiled MXU sweep
+    # pallas_call / pure_callback don't batch — scan the batch instead
+    return lax.map(one, series_batch)
+
+
+def batched_profile(series_batch, s: int, *, block: int = 256,
+                    backend: Optional[str] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Matrix profile of a (B, L) stack of equal-length series.
+
+    The serving-plane workhorse: on ``xla`` the whole batch is one
+    vmapped tile sweep (B series amortize one compilation and fill the
+    MXU together); ``pallas``/``numpy`` scan the batch series-by-series
+    through the same engine.  Returns (d2 (B, n), neighbor (B, n)).
+    """
+    xb = jnp.atleast_2d(jnp.asarray(series_batch, jnp.float32))
+    return _batched_profile_jit(xb, s=s, block=block,
+                                backend=resolve_backend(backend))

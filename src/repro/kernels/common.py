@@ -21,6 +21,24 @@ def pad_to(x, multiple: int, axis: int = 0, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def pad_block_operands(win, mu, sig, ids, *, rows: int,
+                       lanes: int | None = None):
+    """MXU-align one window block (win, mu, sig, ids).
+
+    Rows go to a multiple of ``rows`` and window lanes to a multiple
+    of ``lanes`` (zero lanes don't change dot products).  Padded stats
+    are (mu=0, sig=1) and padded ids are -1, so every extra lane comes
+    back masked to +inf and can be sliced off.  This is THE alignment
+    invariant for window-block pallas kernels — keep all of them on it.
+    """
+    if lanes is not None:
+        win = pad_to(win, lanes, axis=1)
+    win = pad_to(win, rows, axis=0)
+    rows_p = win.shape[0]
+    return (win, pad_to(mu, rows_p), pad_to(sig, rows_p, value=1.0),
+            pad_to(ids, rows_p, value=-1))
+
+
 def default_interpret() -> bool:
     """Pallas kernels execute for real only on TPU; elsewhere interpret."""
     return jax.default_backend() != "tpu"
@@ -53,6 +71,19 @@ def znorm_d2_formula(dots, s, mu_q, sig_q, mu_c, sig_c):
     corr = (dots - s * mu_q[:, None] * mu_c[None, :]) / (
         s * sig_q[:, None] * sig_c[None, :])
     return jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+
+
+def exclusion_mask(qid, cid, s: int, n_valid: int):
+    """Self-match band + padding lanes (ids outside [0, n_valid)).
+
+    Pure jnp on 1-D id vectors, so it is usable both at the XLA level
+    and inside Pallas kernel bodies (ids loaded from refs; TPU's 2-D
+    iota restriction doesn't apply here).
+    """
+    qi = qid[:, None]
+    cj = cid[None, :]
+    return ((jnp.abs(qi - cj) < s) | (qi < 0) | (qi >= n_valid)
+            | (cj < 0) | (cj >= n_valid))
 
 
 def to_np(x) -> np.ndarray:

@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..common import (ceil_div, exclusion_mask, pad_block_operands,
+                      pad_to, znorm_d2_formula)
+
 BIG = float("inf")
 
 
@@ -67,10 +70,10 @@ def _mp_tile_kernel(series_ref, mu_ref, sig_ref,
         qsig = pl.load(sig_ref, (pl.dslice(q0, block),))
         cmu = pl.load(mu_ref, (pl.dslice(c0, block),))
         csig = pl.load(sig_ref, (pl.dslice(c0, block),))
-        corr = (dots - s * qmu[:, None] * cmu[None, :]) \
-            / (s * qsig[:, None] * csig[None, :])
-        d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+        d2 = znorm_d2_formula(dots, s, qmu, qsig, cmu, csig)
 
+        # mask stays inline: TPU Pallas requires >= 2-D iota, so the id
+        # grids can't go through the 1-D exclusion_mask helper
         qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
         cj = c0 + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
         bad = (jnp.abs(qi - cj) < s) | (cj >= n_valid) | (qi >= n_valid)
@@ -90,6 +93,66 @@ def _mp_tile_kernel(series_ref, mu_ref, sig_ref,
         take = col_min < cur
         cmin_ref[...] = jnp.where(take, col_min, cur)
         carg_ref[...] = jnp.where(take, col_arg, carg_ref[...])
+
+
+def _qvc_tile_kernel(q_ref, qmu_ref, qsig_ref, qid_ref,
+                     chunk_ref, cmu_ref, csig_ref, cid_ref,
+                     d2_ref, *, s: int, s_pad: int, block: int,
+                     n_valid: int):
+    """Gathered query windows vs one contiguous candidate chunk.
+
+    The candidate (s_pad, block) Hankel tile is built *in-kernel* from
+    the raw chunk (same VMEM-resident trick as the full-profile
+    kernel), so the HBM side of the tile never materializes block*s
+    floats.  Rows s..s_pad-1 are zeros to match the queries' MXU lane
+    padding — zeros on both sides leave the dot products unchanged.
+    """
+    hank = _hankel_T(chunk_ref, 0, block, s)             # (s, block)
+    cT = jnp.concatenate(
+        [hank, jnp.zeros((s_pad - s, block), jnp.float32)], axis=0) \
+        if s_pad > s else hank                           # (s_pad, block)
+    dots = jax.lax.dot_general(
+        q_ref[...], cT, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bq, block)
+    d2 = znorm_d2_formula(dots, s, qmu_ref[...], qsig_ref[...],
+                          cmu_ref[...], csig_ref[...])
+    bad = exclusion_mask(qid_ref[...], cid_ref[...], s, n_valid)
+    d2_ref[...] = jnp.where(bad, BIG, d2)
+
+
+def qvc_block_pallas(qwin, qmu, qsig, qid, chunk, cmu, csig, cid, *,
+                     s: int, n_valid: int, interpret: bool = True):
+    """Masked d2 tile of gathered queries vs a contiguous window block.
+
+    qwin (Bq, s) + stats/ids; chunk (block + s - 1,) raw series slice
+    whose windows are built in-kernel; cmu/csig/cid (block,).
+    Returns (Bq, block) f32 with +inf at masked lanes.
+
+    All operands are padded to MXU-aligned shapes (rows to 8, lanes to
+    128) before the kernel; padded ids are -1 so their lanes come back
+    +inf and are sliced off.
+    """
+    bq = qwin.shape[0]
+    block = cmu.shape[0]
+    qwin, qmu, qsig, qid = pad_block_operands(qwin, qmu, qsig, qid,
+                                              rows=8, lanes=128)
+    blk_p = ceil_div(block, 128) * 128
+    # Hankel reads go up to chunk[(blk_p - 1) + (s - 1)]; round the
+    # buffer itself up to a lane multiple as well
+    chunk = pad_to(pad_to(chunk, blk_p + s - 1), 128)
+    cmu = pad_to(cmu, blk_p)
+    csig = pad_to(csig, blk_p, value=1.0)
+    cid = pad_to(cid, blk_p, value=-1)
+    kernel = functools.partial(_qvc_tile_kernel, s=s,
+                               s_pad=qwin.shape[1], block=blk_p,
+                               n_valid=n_valid)
+    d2 = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((qwin.shape[0], blk_p),
+                                       jnp.float32),
+        interpret=interpret,
+    )(qwin, qmu, qsig, qid, chunk, cmu, csig, cid)
+    return d2[:bq, :block]
 
 
 def mp_block_pallas(series_pad, mu_pad, sig_pad, *, s: int, n_valid: int,

@@ -1,45 +1,18 @@
-"""Jit'd wrapper for the mpblock kernel: exact matrix profile.
+"""Public op for the mpblock kernel: exact matrix profile.
 
-Pads the series so every block's Hankel build stays in bounds, runs the
-upper-triangle tile sweep, and merges row/col accumulators into the
-final profile.  This is the SCAMP-class baseline *and* the oracle nnd
-profile used by the JAX HST plane.
+A thin delegate: the pad / kernel-launch / row-col-merge assembly
+lives in ``repro.core.tiles.TileEngine.profile`` (pallas branch), the
+single implementation every search strategy shares.  This module keeps
+the historical ``kernels.mpblock.ops.matrix_profile`` entry point —
+the SCAMP-class baseline *and* the oracle nnd profile used by the JAX
+HST plane.
 """
 from __future__ import annotations
-
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from ..common import ceil_div, default_interpret, sliding_stats_jnp
-from .kernel import mp_block_pallas
-
-
-@functools.partial(jax.jit, static_argnames=("s", "block", "interpret"))
-def _mp_jit(series, *, s, block, interpret):
-    series = jnp.asarray(series, jnp.float32)
-    n = series.shape[0] - s + 1
-    n_pad = ceil_div(n, block) * block
-    mu, sig = sliding_stats_jnp(series, s)
-    mu_p = jnp.pad(mu, (0, n_pad - n))
-    sig_p = jnp.pad(sig, (0, n_pad - n), constant_values=1.0)
-    # series long enough for the last block's Hankel build:
-    L_need = n_pad + s - 1
-    ser_p = jnp.pad(series, (0, max(0, L_need - series.shape[0])))
-    rmin, rarg, cmin, carg = mp_block_pallas(
-        ser_p, mu_p, sig_p, s=s, n_valid=n, block=block,
-        interpret=interpret)
-    take_row = rmin <= cmin
-    d2 = jnp.where(take_row, rmin, cmin)
-    arg = jnp.where(take_row, rarg, carg)
-    return d2[:n], arg[:n]
 
 
 def matrix_profile(series, s: int, *, block: int = 128,
                    interpret: bool | None = None):
     """Exact self-join matrix profile: (nnd, neighbor) per window."""
-    if interpret is None:
-        interpret = default_interpret()
-    d2, arg = _mp_jit(series, s=s, block=block, interpret=interpret)
-    return jnp.sqrt(d2), arg
+    from ...core.matrix_profile import matrix_profile_jax
+    return matrix_profile_jax(series, s, block=block, backend="pallas",
+                              interpret=interpret)

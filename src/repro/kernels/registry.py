@@ -1,0 +1,191 @@
+"""Pluggable distance-tile backends — the single home of Eq. (3).
+
+Every search strategy in the repo (HST-JAX verification sweeps, the
+distributed ring, the matrix-profile baseline, the batched multi-series
+front door) reduces to the same hot spot: a (Bq x Bc) tile of squared
+z-normalized distances in the scalar-product form
+
+    d2(k, l) = 2 s (1 - (k.l - s mu_k mu_l) / (s sigma_k sigma_l))
+
+with the self-match band and padding lanes masked to +inf.  This module
+is the registry of interchangeable implementations of that tile:
+
+  * ``xla``    — jnp dot_general + rank-1 correction; the portable
+                 default (CPU/GPU, and perfectly respectable on TPU).
+  * ``pallas`` — MXU tile kernel (this file) for gathered window
+                 blocks; the series-resident Hankel variants live in
+                 ``kernels/mpblock`` and are dispatched by the engine
+                 (``core/tiles.TileEngine``) for contiguous sweeps.
+  * ``numpy``  — pure-NumPy host reference, routed through
+                 ``jax.pure_callback`` so it stays usable inside jitted
+                 search loops.  Ground truth for parity tests.
+
+Backend selection order (``resolve_backend``):
+  explicit argument > ``REPRO_TILE_BACKEND`` env var > auto-detect
+  (``pallas`` on TPU, ``xla`` elsewhere — the ``default_interpret``
+  convention).
+
+A backend is a callable
+
+    fn(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, *, s, n_valid) -> d2
+
+taking f32 window blocks (Bq, s)/(Bc, s), their per-window stats, and
+their *global* window ids (i32; negative or >= n_valid means padding),
+returning the masked (Bq, Bc) f32 d2 tile.  Register new hardware with
+``@register_backend("name")``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import (default_interpret, exclusion_mask,
+                     pad_block_operands, znorm_d2_formula)
+
+TileBackendFn = Callable[..., jnp.ndarray]
+
+_REGISTRY: Dict[str, TileBackendFn] = {}
+_ALIASES = {"jnp": "xla", "ref": "numpy", "np": "numpy"}
+
+ENV_VAR = "REPRO_TILE_BACKEND"
+
+
+def register_backend(name: str):
+    """Decorator: add a tile backend under ``name``."""
+    def deco(fn: TileBackendFn) -> TileBackendFn:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> TileBackendFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown tile backend {name!r}; available: "
+            f"{available_backends()}") from None
+
+
+def resolve_backend(name: str | None = None) -> str:
+    """explicit arg > REPRO_TILE_BACKEND env > hardware auto-detect."""
+    if name is None:
+        name = os.environ.get(ENV_VAR) or None
+    if name is None:
+        name = "pallas" if jax.default_backend() == "tpu" else "xla"
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown tile backend {name!r}; available: "
+            f"{available_backends()}")
+    return name
+
+
+# ----------------------------------------------------------------------
+# xla backend
+# ----------------------------------------------------------------------
+@register_backend("xla")
+def tile_d2_xla(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, *,
+                s: int, n_valid: int):
+    dots = lax.dot_general(qwin, cwin, (((1,), (1,)), ((), ())),
+                           preferred_element_type=jnp.float32)
+    d2 = znorm_d2_formula(dots, s, qmu, qsig, cmu, csig)
+    return jnp.where(exclusion_mask(qid, cid, s, n_valid), jnp.inf, d2)
+
+
+# ----------------------------------------------------------------------
+# numpy backend (host reference behind pure_callback)
+# ----------------------------------------------------------------------
+def _tile_d2_np(qwin, qmu, qsig, qid, cwin, cmu, csig, cid,
+                s: int, n_valid: int) -> np.ndarray:
+    """The reference implementation — deliberately an *independent*
+    NumPy transcription of Eq. (3) (not a call into znorm_d2_formula),
+    so backend-parity tests validate the shared formula against it."""
+    dots = np.asarray(qwin, np.float32) @ np.asarray(cwin, np.float32).T
+    corr = (dots - s * np.outer(qmu, cmu)) / (s * np.outer(qsig, csig))
+    d2 = np.maximum(2.0 * s * (1.0 - corr), 0.0)
+    qi = np.asarray(qid)[:, None]
+    cj = np.asarray(cid)[None, :]
+    bad = ((np.abs(qi - cj) < s) | (qi < 0) | (qi >= n_valid)
+           | (cj < 0) | (cj >= n_valid))
+    return np.where(bad, np.inf, d2).astype(np.float32)
+
+
+@register_backend("numpy")
+def tile_d2_numpy(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, *,
+                  s: int, n_valid: int):
+    out = jax.ShapeDtypeStruct((qwin.shape[0], cwin.shape[0]),
+                               jnp.float32)
+    fn = functools.partial(_tile_d2_np, s=s, n_valid=n_valid)
+    return jax.pure_callback(fn, out, qwin, qmu, qsig, qid,
+                             cwin, cmu, csig, cid)
+
+
+# ----------------------------------------------------------------------
+# pallas backend (gathered window blocks; one resident MXU tile)
+# ----------------------------------------------------------------------
+def _tile_d2_kernel(q_ref, qmu_ref, qsig_ref, qid_ref,
+                    c_ref, cmu_ref, csig_ref, cid_ref,
+                    d2_ref, *, s: int, n_valid: int):
+    dots = lax.dot_general(q_ref[...], c_ref[...],
+                           (((1,), (1,)), ((), ())),
+                           preferred_element_type=jnp.float32)
+    d2 = znorm_d2_formula(dots, s, qmu_ref[...], qsig_ref[...],
+                          cmu_ref[...], csig_ref[...])
+    bad = exclusion_mask(qid_ref[...], cid_ref[...], s, n_valid)
+    d2_ref[...] = jnp.where(bad, float("inf"), d2)
+
+
+BLOCK_Q = 128    # VMEM-resident query rows per grid step
+BLOCK_C = 128    # candidate columns streamed per grid step
+
+
+@register_backend("pallas")
+def tile_d2_pallas(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, *,
+                   s: int, n_valid: int, interpret: bool | None = None):
+    """Gridded MXU tile kernel: arbitrary (Bq, Bc) inputs stream
+    through VMEM in (BLOCK_Q x BLOCK_C) steps, so per-step residency
+    is bounded no matter how large the caller's blocks are (the
+    distributed ring hands over whole per-shard slabs)."""
+    if interpret is None:
+        interpret = default_interpret()
+    bq, bc = qwin.shape[0], cwin.shape[0]
+    rows_q = BLOCK_Q if bq > BLOCK_Q else 8
+    qwin, qmu, qsig, qid = pad_block_operands(qwin, qmu, qsig, qid,
+                                              rows=rows_q, lanes=128)
+    cwin, cmu, csig, cid = pad_block_operands(cwin, cmu, csig, cid,
+                                              rows=BLOCK_C, lanes=128)
+    bq_p, s_p = qwin.shape
+    bc_p = cwin.shape[0]
+    blk_q = min(bq_p, BLOCK_Q)
+    grid = (bq_p // blk_q, bc_p // BLOCK_C)
+    kernel = functools.partial(_tile_d2_kernel, s=s, n_valid=n_valid)
+    d2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_q, s_p), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_q,), lambda i, j: (i,)),
+            pl.BlockSpec((blk_q,), lambda i, j: (i,)),
+            pl.BlockSpec((blk_q,), lambda i, j: (i,)),
+            pl.BlockSpec((BLOCK_C, s_p), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_C,), lambda i, j: (j,)),
+            pl.BlockSpec((BLOCK_C,), lambda i, j: (j,)),
+            pl.BlockSpec((BLOCK_C,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((blk_q, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bq_p, bc_p), jnp.float32),
+        interpret=interpret,
+    )(qwin, qmu, qsig, qid, cwin, cmu, csig, cid)
+    return d2[:bq, :bc]

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..common import znorm_d2_formula
+
 BIG = float("inf")   # python scalar: must not be a traced constant
 
 
@@ -40,11 +42,8 @@ def _zdist_tile_kernel(qid_ref, q_ref, qmu_ref, qsig_ref,
     dots = jax.lax.dot_general(
         q, c, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)            # (bq, bc) on the MXU
-    qmu, qsig = qmu_ref[...], qsig_ref[...]
-    cmu, csig = cmu_ref[...], csig_ref[...]
-    corr = (dots - s * qmu[:, None] * cmu[None, :]) \
-        / (s * qsig[:, None] * csig[None, :])
-    d2 = jnp.maximum(2.0 * s * (1.0 - corr), 0.0)
+    d2 = znorm_d2_formula(dots, s, qmu_ref[...], qsig_ref[...],
+                          cmu_ref[...], csig_ref[...])
 
     bq, bc = d2.shape
     qi = qid_ref[...][:, None]                          # (bq, 1) global ids

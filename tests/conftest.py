@@ -1,8 +1,18 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
 must see 1 device (the dry-run sets its own 512-device flag in its own
 process; multi-device tests spawn subprocesses)."""
+import os
+from pathlib import Path
+
 import numpy as np
 import pytest
+
+# pytest itself finds `repro` via pyproject's pythonpath=["src"], but the
+# multi-device tests spawn fresh interpreters — export src for them too
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+if _SRC not in os.environ.get("PYTHONPATH", "").split(os.pathsep):
+    _old = os.environ.get("PYTHONPATH")
+    os.environ["PYTHONPATH"] = _SRC + os.pathsep + _old if _old else _SRC
 
 from repro.data.timeseries import (ecg_like, sine_noise,
                                    with_implanted_anomalies)

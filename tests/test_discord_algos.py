@@ -10,6 +10,8 @@ The load-bearing properties:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import find_discords

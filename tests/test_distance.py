@@ -1,6 +1,8 @@
 """Distance layer: Eq.(1) == Eq.(2) == Eq.(3), counters, stats."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distance import DistanceCounter, dist_eq1, dist_eq2, dist_eq3

@@ -31,10 +31,16 @@ r_ref = find_discords(x, s, 3, method="brute")
 # pruning power is only meaningful when r discriminates: k=1 puts r
 # just under the top discord's nnd
 r_drag1 = drag_discords(x, s, 1)
+# the pluggable tile backend must also work inside the shard body
+# (pallas runs gridded, interpret mode on CPU)
+r_pl = distributed_discords(x[:900], s, 1, backend="pallas")
+r_pl_ref = find_discords(x[:900], s, 1, method="brute")
 print(json.dumps({
     "ok_mp": ok_mp,
     "ring_pos": r_ring.positions, "drag_pos": r_drag.positions,
     "ref_pos": r_ref.positions,
+    "ring_pallas_pos": r_pl.positions,
+    "ring_pallas_ref": r_pl_ref.positions,
     "drag_survivors_k1": r_drag1.extra["survivors"],
     "n": int(prof.shape[0]),
 }))
@@ -59,6 +65,10 @@ def test_ring_discords_match_brute(result):
 
 def test_drag_discords_match_brute(result):
     assert result["drag_pos"] == result["ref_pos"]
+
+
+def test_ring_pallas_backend_match_brute(result):
+    assert result["ring_pallas_pos"] == result["ring_pallas_ref"]
 
 
 def test_drag_pruning_effective(result):

@@ -1,5 +1,8 @@
 """Sequitur + RRA baseline tests."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.serial.sequitur import sequitur

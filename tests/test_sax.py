@@ -1,6 +1,8 @@
 """SAX layer: breakpoints, PAA, cluster-table invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sax import SaxTable, gaussian_breakpoints, paa, sax_words
