@@ -2,7 +2,9 @@
 
 Runs the ring matrix profile and the two-phase DRAG search on 8
 simulated devices (shard_map + ppermute) and checks both against the
-serial exact result.
+serial exact result — all three through the same ``DiscordEngine``
+session front door (``ring`` is the canonical name; the legacy
+``distributed`` spelling resolves to it).
 
     PYTHONPATH=src python examples/distributed_discord.py
 """
@@ -14,11 +16,8 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 import time                                                  # noqa: E402
 
 import jax                                                   # noqa: E402
-import numpy as np                                           # noqa: E402
 
-from repro.core import find_discords                         # noqa: E402
-from repro.core.distributed import (distributed_discords,    # noqa: E402
-                                    drag_discords)
+from repro.core import DiscordEngine, SearchSpec             # noqa: E402
 from repro.data import ecg_like, with_implanted_anomalies    # noqa: E402
 
 print(f"devices: {len(jax.devices())}")
@@ -28,18 +27,21 @@ x, planted = with_implanted_anomalies(
 s = 128
 print(f"series {x.shape[0]} pts, planted anomalies at {planted}\n")
 
+base = SearchSpec(s=s, k=3, method="hst")
+assert base.replace(method="distributed").method == "ring"  # one name
+
 t0 = time.perf_counter()
-serial = find_discords(x, s, 3, method="hst")
+serial = DiscordEngine(base).search(x)
 print(f"serial HST      : {serial.positions} "
       f"({time.perf_counter() - t0:.2f}s, {serial.calls} calls)")
 
 t0 = time.perf_counter()
-ring = distributed_discords(x, s, 3)
+ring = DiscordEngine(base.replace(method="ring")).search(x)
 print(f"ring MP (8 dev) : {ring.positions} "
       f"({time.perf_counter() - t0:.2f}s)")
 
 t0 = time.perf_counter()
-drag = drag_discords(x, s, 3)
+drag = DiscordEngine(base.replace(method="drag")).search(x)
 print(f"DRAG    (8 dev) : {drag.positions} "
       f"({time.perf_counter() - t0:.2f}s, "
       f"{drag.extra['survivors']} phase-1 survivors)")

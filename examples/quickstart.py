@@ -1,10 +1,12 @@
-"""Quickstart: exact discord search with every engine in the library.
+"""Quickstart: the compile-once session API, plus every engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import time
+
 import numpy as np
 
-from repro.core import find_discords
+from repro.core import DiscordEngine, SearchSpec
 from repro.data import sine_noise, with_implanted_anomalies
 
 # --- make a series with two planted anomalies -------------------------
@@ -14,9 +16,11 @@ x, planted = with_implanted_anomalies(
 print(f"series: {x.shape[0]} points, anomalies planted at {planted}\n")
 
 # --- the paper's algorithm (HST) vs its baselines ----------------------
+# One spec per method; the session engine is the single front door for
+# the serial counted plane and the blocked JAX plane alike.
 for method in ("brute", "hotsax", "hst", "rra", "hst_jax",
                "matrix_profile"):
-    r = find_discords(x, s=96, k=2, method=method)
+    r = DiscordEngine(SearchSpec(s=96, k=2, method=method)).search(x)
     print(f"{method:15s} pos={r.positions}  nnd="
           f"{[round(v, 3) for v in r.nnds]}  calls={r.calls:>9d}  "
           f"cps={r.cps:7.1f}  {r.runtime_s:6.3f}s")
@@ -24,7 +28,41 @@ for method in ("brute", "hotsax", "hst", "rra", "hst_jax",
 print("\nAll exact engines agree; HST needs the fewest distance calls "
       "(the paper's Table 1 claim).")
 
+# --- compile once, search many -----------------------------------------
+# The engine buckets series lengths to powers of two and caches one
+# compiled tile sweep per (spec, bucket): the second search retraces
+# nothing, whatever its exact length.
+eng = DiscordEngine(SearchSpec(s=96, k=2, method="matrix_profile"))
+t0 = time.perf_counter(); eng.search(x)
+cold = time.perf_counter() - t0
+y = sine_noise(7777, E=0.2, seed=11)              # same 8192 bucket
+t0 = time.perf_counter(); eng.search(y)
+warm = time.perf_counter() - t0
+print(f"\nsession engine: first search {cold:.3f}s (traces+compiles), "
+      f"same-bucket search {warm:.3f}s "
+      f"({eng.stats.traces} trace(s) total)")
+
+# --- multi-window search (one spec, one result per length) -------------
+for r in DiscordEngine(SearchSpec(s=(64, 96, 128), k=1,
+                                  method="matrix_profile")).search(x):
+    print(f"  s={r.s:4d} -> discord at {r.positions[0]} "
+          f"(nnd {r.nnds[0]:.3f})")
+
+# --- streaming: append-only profile maintenance ------------------------
+# Old windows warm-start from their previous nnd (appends can only
+# lower them), so each append sweeps just the new tail tile rows.
+stream = eng.open_stream(history=x[:6000])
+lanes_init = stream.tile_lanes
+for lo in range(6000, 8000, 500):
+    stream.append(x[lo:lo + 500])
+print(f"\nstream: init swept {lanes_init} tile lanes, "
+      f"{stream.appends - 1} appends swept "
+      f"{stream.tile_lanes - lanes_init} more "
+      f"(full recompute would re-sweep {lanes_init} each time)")
+print(f"stream discords: {stream.discords()}")
+
 # --- raw-Euclidean mode (telemetry-style magnitude anomalies) ----------
-r = find_discords(x, s=96, k=2, method="hst", znorm=False)
+r = DiscordEngine(SearchSpec(s=96, k=2, method="hst",
+                             znorm=False)).search(x)
 print(f"\nraw-euclidean hst: pos={r.positions} (DADD's convention, "
       "used by the telemetry monitor)")

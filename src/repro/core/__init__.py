@@ -7,9 +7,17 @@ Layers:
                                  numpy | xla | pallas backends)
   * hst_jax / matrix_profile   — TPU-native blocked JAX implementations
   * distributed                — shard_map multi-pod discord search
-  * api.find_discords{,_batched} — single entrypoints
+  * spec / engine              — the session API: typed SearchSpec,
+                                 compile-once DiscordEngine with a
+                                 bucketed plan cache, and streaming
+                                 DiscordStream (incremental appends)
+  * api                        — deprecated one-shot wrappers
 """
 from .api import find_discords, find_discords_batched
+from .engine import DiscordEngine, DiscordStream, EngineStats
 from .result import DiscordResult
+from .spec import SearchSpec
 
-__all__ = ["find_discords", "find_discords_batched", "DiscordResult"]
+__all__ = ["SearchSpec", "DiscordEngine", "DiscordStream",
+           "EngineStats", "DiscordResult", "find_discords",
+           "find_discords_batched"]

@@ -1,26 +1,75 @@
-"""Public discord-search entrypoints.
+"""Deprecated one-shot wrappers over the session API.
 
-``find_discords`` dispatches between the paper-faithful serial
-implementations (exact call counting — the reproduction plane) and the
-TPU-native JAX implementations (the performance plane).  All JAX
-methods share one distance-tile engine (``core/tiles``) whose backend
-(``numpy`` | ``xla`` | ``pallas``) is selected with ``backend=``, the
-``REPRO_TILE_BACKEND`` env var, or hardware auto-detection.
+The public API now lives in :mod:`repro.core.spec` /
+:mod:`repro.core.engine`: build a frozen :class:`SearchSpec`, hand it
+to a :class:`DiscordEngine`, and reuse that engine — it compiles once
+per ``(spec, length-bucket)`` and keeps streaming state across
+appends::
 
-``find_discords_batched`` is the serving-plane front door: one
-compiled search over a stack of equal-length monitored streams.
+    from repro.core import DiscordEngine, SearchSpec
+
+    eng = DiscordEngine(SearchSpec(s=128, k=3,
+                                   method="matrix_profile"))
+    r = eng.search(series)              # compiled, cached
+    batch_rs = eng.search_batched(stack)
+    stream = eng.open_stream(history=series)
+    stream.append(new_points)           # sweeps only the tail rows
+
+Migration from the old kwargs (see README for the full table):
+
+    find_discords(x, s, k, method=..., P=..., alpha=..., seed=...,
+                  r=..., znorm=..., backend=...)
+      -> DiscordEngine(SearchSpec(s=s, k=k, method=..., ...)).search(x)
+
+``find_discords`` and ``find_discords_batched`` remain as thin
+wrappers constructing a one-shot engine (engines are cached per spec,
+so repeated wrapper calls still share compilations), emit a
+``DeprecationWarning``, and will not grow new features.  ``method``
+accepts both the canonical ``ring`` and the legacy ``distributed``
+spelling.
 """
 from __future__ import annotations
 
-import time
+import warnings
+from collections import OrderedDict
 from typing import List, Optional
 
 import numpy as np
 
+from ..kernels.registry import resolve_backend
+from .engine import DiscordEngine
 from .result import DiscordResult
+from .spec import SearchSpec
 
-_SERIAL = ("brute", "hotsax", "hst", "dadd", "rra")
-_JAX = ("hst_jax", "matrix_profile", "distributed", "drag")
+# one engine per spec: the wrappers stay stateless for callers while
+# still sharing plan caches across repeated identical calls.  Bounded
+# LRU — legacy callers sweeping parameters (every distinct seed/s/r is
+# a distinct spec) must not accumulate compiled plans forever.  The
+# *resolved* backend joins the key so a backend=None spec re-resolves
+# per call (REPRO_TILE_BACKEND flips mid-process keep working, as they
+# did with the stateless entrypoints).
+_ENGINES: "OrderedDict[tuple, DiscordEngine]" = OrderedDict()
+_ENGINE_CACHE_MAX = 64
+
+
+def engine_for(spec: SearchSpec) -> DiscordEngine:
+    """Shared module-level engine for ``spec`` (created on first use)."""
+    key = (spec, resolve_backend(spec.backend))
+    eng = _ENGINES.get(key)
+    if eng is None:
+        eng = _ENGINES[key] = DiscordEngine(spec)
+        while len(_ENGINES) > _ENGINE_CACHE_MAX:
+            _ENGINES.popitem(last=False)
+    else:
+        _ENGINES.move_to_end(key)
+    return eng
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; build a SearchSpec and reuse a "
+        "DiscordEngine (repro.core.engine) instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def find_discords(series: np.ndarray, s: int, k: int = 1, *,
@@ -28,88 +77,41 @@ def find_discords(series: np.ndarray, s: int, k: int = 1, *,
                   seed: int = 0, r: Optional[float] = None,
                   znorm: bool = True, backend: Optional[str] = None,
                   **kw) -> DiscordResult:
-    """Find the top-k discords of a 1-D series.
+    """Deprecated: one-shot ``DiscordEngine(SearchSpec(...)).search``.
 
     method:
       serial (counted, paper-faithful): brute | hotsax | hst | dadd | rra
       jax (TPU-native, blocked):        hst_jax | matrix_profile |
-                                        distributed | drag
+                                        ring (alias: distributed) | drag
 
     ``backend`` picks the distance-tile backend for the jax methods
     (``numpy`` | ``xla`` | ``pallas``); serial methods ignore it.
-
     ``znorm=False`` switches to raw Euclidean windows (DADD's
-    convention, paper Sec 4.4) — used by the telemetry monitor where
-    magnitude carries the signal (brute | hst only).
+    convention, paper Sec 4.4; brute | hst | matrix_profile).
     """
-    series = np.asarray(series, dtype=np.float64)
-    if method == "brute":
-        from .serial import brute_force
-        return brute_force(series, s, k, znorm=znorm)
-    if method == "hotsax":
-        from .serial import hotsax
-        return hotsax(series, s, k, P=P, alpha=alpha, seed=seed)
-    if method == "hst":
-        from .serial import hst
-        return hst(series, s, k, P=P, alpha=alpha, seed=seed,
-                   znorm=znorm)
-    if method == "dadd":
-        from .serial import dadd
-        from .serial.dadd import pick_r_by_sampling
-        rr = r if r is not None else 0.99 * pick_r_by_sampling(
-            series, s, k, seed=seed)
-        return dadd(series, s, k, r=rr, seed=seed)
-    if method == "rra":
-        from .serial import rra
-        return rra(series, s, k, P=P, alpha=alpha, seed=seed)
-    if method == "hst_jax":
-        from .hst_jax import hst_jax
-        return hst_jax(series, s, k, P=P, alpha=alpha, seed=seed,
-                       backend=backend, **kw)
-    if method == "matrix_profile":
-        from .matrix_profile import discords_via_matrix_profile
-        return discords_via_matrix_profile(series, s, k,
-                                           backend=backend, **kw)
-    if method == "distributed":
-        from .distributed import distributed_discords
-        return distributed_discords(series, s, k, backend=backend, **kw)
-    if method == "drag":
-        from .distributed import drag_discords
-        return drag_discords(series, s, k, r=r, seed=seed,
-                             backend=backend, **kw)
-    raise ValueError(
-        f"unknown method {method!r}; pick one of {_SERIAL + _JAX}")
+    _deprecated("find_discords")
+    block = kw.pop("block", None)
+    spec = SearchSpec(s=s, k=k, method=method, P=P, alpha=alpha,
+                      seed=seed, r=r, znorm=znorm, backend=backend,
+                      block=int(block) if block is not None else 256)
+    if spec.method == "hst_jax" and block is not None:
+        kw["block"] = int(block)      # hst_jax keeps its own default
+    return engine_for(spec).search(series, **kw)
 
 
 def find_discords_batched(series_batch, s: int, k: int = 1, *,
                           block: int = 256,
                           backend: Optional[str] = None
                           ) -> List[DiscordResult]:
-    """Top-k discords of every series in a (B, L) stack — one search.
+    """Deprecated: one-shot ``DiscordEngine(...).search_batched``.
 
-    The batched front door for the serving/telemetry plane: the whole
-    stack goes through one compiled tile-engine sweep (vmapped on the
-    ``xla`` backend, scanned per series on ``pallas``/``numpy``), then
-    each series' exact profile is reduced to its top-k non-overlapping
-    maxima.  Per-series results match ``find_discords(...,
-    method="matrix_profile")`` run serially on each member.
+    Top-k discords of every series in a (B, L) stack through one
+    plan-cached tile sweep.  Each result's ``runtime_s`` is the true
+    per-batch wall clock (the first call includes compile time;
+    same-bucket calls are warm) with ``per_series_s`` and the total
+    ``tile_lanes`` in ``extra``.
     """
-    from .tiles import batched_profile, resolve_backend, \
-        topk_nonoverlapping
-    t0 = time.perf_counter()
-    backend = resolve_backend(backend)
-    d2b, _argb = batched_profile(series_batch, s, block=block,
-                                 backend=backend)
-    profs = np.sqrt(np.asarray(d2b, np.float64))
-    elapsed = time.perf_counter() - t0
-    n = profs.shape[1]
-    out: List[DiscordResult] = []
-    for b in range(profs.shape[0]):
-        pos, vals = topk_nonoverlapping(profs[b], k, s)
-        out.append(DiscordResult(
-            positions=pos, nnds=vals, calls=n * n, n=n, s=s,
-            method=f"batched_mp[{backend}]",
-            runtime_s=elapsed / profs.shape[0],
-            extra={"batch_size": int(profs.shape[0]),
-                   "batch_index": b, "backend": backend}))
-    return out
+    _deprecated("find_discords_batched")
+    spec = SearchSpec(s=s, k=k, method="matrix_profile", block=block,
+                      backend=backend)
+    return engine_for(spec).search_batched(series_batch)

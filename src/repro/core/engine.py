@@ -1,0 +1,456 @@
+"""Compile-once discord-search sessions: DiscordEngine + DiscordStream.
+
+HST's two core ideas — the warm-up process and the similarity of
+sequences close in time (paper Sec. 3) — are properties of a *sequence
+of related searches*, but a stateless entrypoint retraces, recompiles
+and forgets between calls.  This module is the session layer that
+carries that state:
+
+``DiscordEngine``
+    Owns a plan cache keyed on ``(kind, s, length_bucket)``.  Series
+    lengths are rounded up to power-of-two buckets (the ServeEngine
+    prompt-bucket rule) and the padding windows are *masked* inside the
+    tile backends (their ids remap to -1), so a second search over any
+    series in the same bucket reuses the compiled tile sweep with zero
+    new traces.  ``search`` / ``search_batched`` are the one-shot and
+    serving front doors; non-profile methods (serial counted
+    implementations, hst_jax, ring, drag) dispatch through the same
+    object so one spec describes any search.
+
+``DiscordStream``
+    The paper's neighbor-similarity idea expressed at the API layer:
+    an append-only series whose exact nnd profile is maintained
+    incrementally.  Appending points can only *lower* an existing
+    window's nnd (new neighbors appear, none retire), so old windows
+    warm-start from their previous value and each ``append`` sweeps
+    only the new tail tile rows (new windows vs everything, column
+    minima folded back into the old profile) instead of the full
+    O(N^2) sweep.
+
+Every compiled plan body bumps ``stats.traces`` when (and only when)
+it is traced, so tests can assert the compile-once contract directly.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels.common import ceil_div
+from ..kernels.registry import resolve_backend
+from .result import DiscordResult
+from .spec import SearchSpec, length_bucket
+from .tiles import TileEngine, topk_nonoverlapping
+
+__all__ = ["DiscordEngine", "DiscordStream", "EngineStats"]
+
+
+@dataclass
+class EngineStats:
+    """Session counters (host-side accounting).
+
+    ``traces`` counts jit traces of the engine's compiled plans — the
+    compile-once contract is ``traces == plans`` for the session.
+    ``tile_lanes`` counts distance lanes swept through the tile
+    engine, the blocked analogue of the paper's distance calls.
+    """
+    traces: int = 0
+    plans: int = 0
+    searches: int = 0
+    appends: int = 0
+    tile_lanes: int = 0
+
+    def as_dict(self) -> dict:
+        return {"traces": self.traces, "plans": self.plans,
+                "searches": self.searches, "appends": self.appends,
+                "tile_lanes": self.tile_lanes}
+
+
+class DiscordEngine:
+    """A discord-search session for one :class:`SearchSpec`.
+
+    Construct from a spec (or spec kwargs), then call ``search`` /
+    ``search_batched`` any number of times over series of varying
+    length — same-bucket calls reuse compiled plans — or
+    ``open_stream`` to maintain a profile incrementally.
+
+        eng = DiscordEngine(SearchSpec(s=128, k=3,
+                                       method="matrix_profile"))
+        r1 = eng.search(x)            # traces + compiles
+        r2 = eng.search(y)            # same bucket: zero new traces
+        st = eng.open_stream(history=x)
+        st.append(new_points)         # sweeps only the tail tile rows
+        print(st.discords())
+    """
+
+    def __init__(self, spec: Optional[SearchSpec] = None, **spec_kwargs):
+        if spec is None:
+            spec = SearchSpec(**spec_kwargs)
+        elif spec_kwargs:
+            raise TypeError("pass either a SearchSpec or spec kwargs, "
+                            "not both")
+        if not isinstance(spec, SearchSpec):
+            raise TypeError(f"spec must be a SearchSpec, got "
+                            f"{type(spec).__name__}")
+        self.spec = spec
+        # resolve once at session start so env-var flips mid-session
+        # can't split the plan cache across backends
+        self.backend = resolve_backend(spec.backend)
+        self.stats = EngineStats()
+        self._plans: dict = {}
+
+    def __repr__(self) -> str:
+        return (f"DiscordEngine({self.spec}, backend={self.backend}, "
+                f"plans={self.stats.plans}, traces={self.stats.traces})")
+
+    # -- plan cache ----------------------------------------------------
+    def _n_pad(self, s: int, Lb: int) -> int:
+        """Padded window count of bucket ``Lb`` (tile geometry)."""
+        return ceil_div(Lb - s + 1, self.spec.block) * self.spec.block
+
+    def _get_plan(self, key, build):
+        fn = self._plans.get(key)
+        if fn is None:
+            fn = self._plans[key] = jax.jit(build())
+            self.stats.plans += 1
+        return fn
+
+    def _profile_plan(self, s: int, Lb: int):
+        """(series_pad (Lb,), n_valid) -> (d2 (n_pad,), neighbor)."""
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, n_valid):
+                self.stats.traces += 1        # trace-time side effect
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                return eng.profile()
+            return fn
+        return self._get_plan(("profile", s, Lb), build)
+
+    def _batched_plan(self, s: int, B: int, Lb: int):
+        """(stack (B, Lb), n_valid) -> (d2 (B, n_pad), neighbor)."""
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(stack, n_valid):
+                self.stats.traces += 1
+
+                def one(x):
+                    eng = TileEngine(x, s, block=spec.block, backend=be,
+                                     znorm=spec.znorm, n_valid=n_valid)
+                    return eng.profile()
+
+                if be == "xla":
+                    return jax.vmap(one)(stack)   # one MXU sweep
+                # pallas_call / pure_callback don't batch — scan instead
+                return lax.map(one, stack)
+            return fn
+        return self._get_plan(("batched", s, B, Lb), build)
+
+    def _tail_plan(self, s: int, Lb: int, Qb: int):
+        """Streaming-append sweep: only the new tail tile rows.
+
+        (series_pad (Lb,), q0, n_valid) ->
+            (row_d2 (Qb,), row_ngh, col_d2 (n_pad,), col_ngh)
+
+        Rows are the ``Qb`` (bucketed, masked) windows starting at
+        ``q0`` — the appended tail — swept against every candidate
+        block.  Row minima are the new windows' exact nnds; column
+        minima are each existing window's best distance *to the new
+        windows*, which the host folds into the old profile (append-
+        only: old nnds can only be superseded, never worsen).
+        """
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, q0, n_valid):
+                self.stats.traces += 1
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+                q = eng.query_block(qids)
+                starts = jnp.arange(eng.nb, dtype=jnp.int32) * eng.block
+
+                def one(c0):
+                    d2, cid = eng.sweep(q, c0)
+                    return (jnp.min(d2, axis=1),
+                            cid[jnp.argmin(d2, axis=1)],
+                            jnp.min(d2, axis=0),
+                            q.ids[jnp.argmin(d2, axis=0)])
+
+                rm, ra, cm, ca = lax.map(one, starts)
+                sel = jnp.argmin(rm, axis=0)[None]        # best block/row
+                row_d2 = jnp.take_along_axis(rm, sel, axis=0)[0]
+                row_ngh = jnp.take_along_axis(ra, sel, axis=0)[0]
+                return row_d2, row_ngh, cm.reshape(-1), ca.reshape(-1)
+            return fn
+        return self._get_plan(("tail", s, Lb, Qb), build)
+
+    # -- searches ------------------------------------------------------
+    def search(self, series, **kw
+               ) -> Union[DiscordResult, List[DiscordResult]]:
+        """Top-k discords of a 1-D series under this engine's spec.
+
+        Multi-window specs return one ``DiscordResult`` per window
+        length (all lengths reuse this session's plan cache).  Extra
+        kwargs are forwarded to the non-plan methods (e.g. hst_jax's
+        ``batch=``); the plan-cached profile path takes none.
+        """
+        spec = self.spec
+        if spec.multi_window:
+            if kw:
+                raise TypeError("multi-window search takes no extra "
+                                f"kwargs, got {sorted(kw)}")
+            return [self._search_profile(series, s)
+                    for s in spec.windows]
+        if spec.method == "matrix_profile":
+            if kw:
+                raise TypeError("matrix_profile search is fully "
+                                "described by the spec and takes no "
+                                f"extra kwargs, got {sorted(kw)}")
+            return self._search_profile(series, spec.s)
+        return self._dispatch(series, **kw)
+
+    def _search_profile(self, series, s: int) -> DiscordResult:
+        """Bucketed, plan-cached exact-profile search."""
+        t0 = time.perf_counter()
+        x = np.asarray(series, np.float64).ravel()
+        L = x.shape[0]
+        if L < s + 1:
+            raise ValueError(f"series of {L} points is too short for "
+                             f"window s={s}")
+        n_true = L - s + 1
+        Lb = length_bucket(L)
+        xp = np.zeros(Lb, np.float32)
+        xp[:L] = x
+        d2, _arg = self._profile_plan(s, Lb)(jnp.asarray(xp),
+                                             np.int32(n_true))
+        prof = np.sqrt(np.asarray(d2, np.float64)[:n_true])
+        pos, vals = topk_nonoverlapping(
+            np.where(np.isfinite(prof), prof, -np.inf), self.spec.k, s)
+        lanes = self._n_pad(s, Lb) ** 2
+        self.stats.searches += 1
+        self.stats.tile_lanes += lanes
+        return DiscordResult(
+            positions=pos, nnds=vals,
+            calls=n_true * n_true,            # SCAMP's O(N^2) work model
+            n=n_true, s=s, method=f"scamp[{self.backend}]",
+            runtime_s=time.perf_counter() - t0,
+            extra={"backend": self.backend, "bucket": Lb,
+                   "tile_lanes": lanes, "znorm": self.spec.znorm})
+
+    def search_batched(self, series_batch) -> List[DiscordResult]:
+        """Top-k discords of every series in a (B, L) stack — one
+        plan-cached sweep (vmapped on ``xla``, scanned elsewhere).
+
+        Timing is honest: every result carries the true per-batch wall
+        clock in ``runtime_s`` (first call includes the one-time
+        trace/compile; warm calls don't) plus the amortized
+        ``per_series_s`` and the total swept ``tile_lanes`` in
+        ``extra`` — so cps/runtime comparisons against serial methods
+        see the real cost.
+        """
+        spec = self.spec
+        if spec.multi_window:
+            raise ValueError("search_batched needs a scalar-s spec")
+        s = spec.s
+        t0 = time.perf_counter()
+        xb = np.atleast_2d(np.asarray(series_batch, np.float64))
+        B, L = xb.shape
+        if L < s + 1:
+            raise ValueError(f"series of {L} points is too short for "
+                             f"window s={s}")
+        n_true = L - s + 1
+        Lb = length_bucket(L)
+        xbp = np.zeros((B, Lb), np.float32)
+        xbp[:, :L] = xb
+        d2b, _argb = self._batched_plan(s, B, Lb)(jnp.asarray(xbp),
+                                                  np.int32(n_true))
+        profs = np.sqrt(np.asarray(d2b, np.float64)[:, :n_true])
+        elapsed = time.perf_counter() - t0
+        lanes = B * self._n_pad(s, Lb) ** 2
+        self.stats.searches += 1
+        self.stats.tile_lanes += lanes
+        out: List[DiscordResult] = []
+        for b in range(B):
+            prof = np.where(np.isfinite(profs[b]), profs[b], -np.inf)
+            pos, vals = topk_nonoverlapping(prof, spec.k, s)
+            out.append(DiscordResult(
+                positions=pos, nnds=vals, calls=n_true * n_true,
+                n=n_true, s=s, method=f"batched_mp[{self.backend}]",
+                runtime_s=elapsed,
+                extra={"batch_size": B, "batch_index": b,
+                       "backend": self.backend, "bucket": Lb,
+                       "per_series_s": elapsed / B,
+                       "tile_lanes": lanes}))
+        return out
+
+    # -- streaming -----------------------------------------------------
+    def open_stream(self, s: Optional[int] = None, *,
+                    history=None) -> "DiscordStream":
+        """Open an append-only profile stream at window length ``s``
+        (defaults to the spec's scalar ``s``), optionally seeded with
+        ``history`` points."""
+        if s is None:
+            if self.spec.multi_window:
+                raise ValueError("multi-window spec: pass s= "
+                                 "explicitly to open_stream")
+            s = self.spec.s
+        return DiscordStream(self, int(s), history=history)
+
+    # -- non-plan methods (serial counted plane, hst_jax, ring, drag) --
+    def _dispatch(self, series, **kw) -> DiscordResult:
+        spec = self.spec
+        s, k = spec.s, spec.k
+        series = np.asarray(series, dtype=np.float64)
+        self.stats.searches += 1
+        m = spec.method
+        if m == "brute":
+            from .serial import brute_force
+            return brute_force(series, s, k, znorm=spec.znorm)
+        if m == "hotsax":
+            from .serial import hotsax
+            return hotsax(series, s, k, P=spec.P, alpha=spec.alpha,
+                          seed=spec.seed)
+        if m == "hst":
+            from .serial import hst
+            return hst(series, s, k, P=spec.P, alpha=spec.alpha,
+                       seed=spec.seed, znorm=spec.znorm)
+        if m == "dadd":
+            from .serial import dadd
+            from .serial.dadd import pick_r_by_sampling
+            rr = spec.r if spec.r is not None else \
+                0.99 * pick_r_by_sampling(series, s, k, seed=spec.seed)
+            return dadd(series, s, k, r=rr, seed=spec.seed)
+        if m == "rra":
+            from .serial import rra
+            return rra(series, s, k, P=spec.P, alpha=spec.alpha,
+                       seed=spec.seed)
+        if m == "hst_jax":
+            from .hst_jax import hst_jax
+            return hst_jax(series, s, k, P=spec.P, alpha=spec.alpha,
+                           seed=spec.seed, backend=self.backend, **kw)
+        if m == "ring":
+            from .distributed import distributed_discords
+            return distributed_discords(series, s, k,
+                                        backend=self.backend, **kw)
+        if m == "drag":
+            from .distributed import drag_discords
+            return drag_discords(series, s, k, r=spec.r, seed=spec.seed,
+                                 backend=self.backend, **kw)
+        raise AssertionError(f"unreachable method {m!r}")
+
+
+class DiscordStream:
+    """Append-only series with an incrementally maintained exact nnd
+    profile (opened via :meth:`DiscordEngine.open_stream`).
+
+    The first fill runs one bucketed full-profile plan; every later
+    ``append`` sweeps only the new tail tile rows through the session's
+    plan cache and min-folds the column results into the old profile —
+    in the append-only case an old window's nnd can only be superseded
+    by a closer new neighbor, never worsen, so no old row is ever
+    re-swept.
+    """
+
+    def __init__(self, engine: DiscordEngine, s: int, history=None):
+        self.engine = engine
+        self.s = int(s)
+        self._x = np.zeros(0, np.float64)
+        self._d2 = np.zeros(0, np.float64)
+        self._ngh = np.zeros(0, np.int64)
+        self.appends = 0
+        self.tile_lanes = 0
+        if history is not None and np.asarray(history).size:
+            self.append(history)
+
+    # -- state ---------------------------------------------------------
+    @property
+    def n_points(self) -> int:
+        return int(self._x.shape[0])
+
+    @property
+    def n_windows(self) -> int:
+        return int(self._d2.shape[0])
+
+    @property
+    def series(self) -> np.ndarray:
+        return self._x.copy()
+
+    def profile(self) -> np.ndarray:
+        """Exact nnd per window (+inf where no non-self match exists)."""
+        return np.sqrt(self._d2)
+
+    def neighbors(self) -> np.ndarray:
+        return self._ngh.copy()
+
+    # -- updates -------------------------------------------------------
+    def append(self, points) -> "DiscordStream":
+        """Fold new points into the profile, sweeping only the tail."""
+        pts = np.asarray(points, np.float64).ravel()
+        if pts.size == 0:
+            return self
+        eng, s = self.engine, self.s
+        n_old = max(0, self._x.shape[0] - s + 1)
+        self._x = np.concatenate([self._x, pts])
+        L = self._x.shape[0]
+        n_new = max(0, L - s + 1)
+        if n_new == n_old:            # still shorter than one window
+            return self
+        Lb = length_bucket(L)
+        xp = np.zeros(Lb, np.float32)
+        xp[:L] = self._x
+        if n_old == 0:                # first fill: one full-profile plan
+            d2, arg = eng._profile_plan(s, Lb)(jnp.asarray(xp),
+                                               np.int32(n_new))
+            self._d2 = np.asarray(d2, np.float64)[:n_new]
+            self._ngh = np.asarray(arg, np.int64)[:n_new]
+            lanes = eng._n_pad(s, Lb) ** 2
+        else:                         # tail sweep only
+            n_tail = n_new - n_old
+            Qb = length_bucket(n_tail, lo=32)
+            rd2, rngh, cd2, cngh = eng._tail_plan(s, Lb, Qb)(
+                jnp.asarray(xp), np.int32(n_old), np.int32(n_new))
+            d2 = np.concatenate([self._d2,
+                                 np.asarray(rd2, np.float64)[:n_tail]])
+            ngh = np.concatenate([self._ngh,
+                                  np.asarray(rngh, np.int64)[:n_tail]])
+            cm = np.asarray(cd2, np.float64)[:n_new]
+            ca = np.asarray(cngh, np.int64)[:n_new]
+            better = cm < d2
+            d2 = np.where(better, cm, d2)
+            ngh = np.where(better, ca, ngh)
+            self._d2, self._ngh = d2, ngh
+            lanes = Qb * eng._n_pad(s, Lb)
+        self.appends += 1
+        self.tile_lanes += lanes
+        eng.stats.appends += 1
+        eng.stats.tile_lanes += lanes
+        return self
+
+    # -- queries -------------------------------------------------------
+    def discords(self, k: Optional[int] = None) -> DiscordResult:
+        """Top-k non-overlapping discords of the current profile."""
+        k = self.engine.spec.k if k is None else int(k)
+        if self._d2.size == 0:
+            return DiscordResult(positions=[], nnds=[], calls=0, n=0,
+                                 s=self.s,
+                                 method=f"stream[{self.engine.backend}]")
+        prof = self.profile()
+        pos, vals = topk_nonoverlapping(
+            np.where(np.isfinite(prof), prof, -np.inf), k, self.s)
+        return DiscordResult(
+            positions=pos, nnds=vals, calls=self.tile_lanes,
+            n=self.n_windows, s=self.s,
+            method=f"stream[{self.engine.backend}]",
+            extra={"appends": self.appends,
+                   "tile_lanes": self.tile_lanes,
+                   "backend": self.engine.backend})

@@ -1,0 +1,161 @@
+"""Typed, frozen search specification — the key of every compiled plan.
+
+Everything that used to be smeared across ``find_discords`` kwargs is
+one validated, *hashable* value object: window length(s), k, method,
+z-normalization, tile backend, SAX parameters, RNG seed, the DADD
+threshold, and the tile block side.  Hashability is the point — a
+``SearchSpec`` keys the :class:`repro.core.engine.DiscordEngine` plan
+cache (and the module-level engine cache behind the deprecated
+one-shot wrappers), so two searches that agree on the spec and the
+length bucket share one compiled tile sweep.
+
+``s`` may be a *tuple* of window lengths (multi-window search à la
+Linardi et al.'s variable-length matrix profile): the engine then runs
+one cached tile sweep per length and returns one result per length.
+
+Method naming: the CLI historically said ``ring`` where the API said
+``distributed``.  Both spell the canonical ``ring`` here; every
+front door funnels through :func:`canonical_method`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple, Union
+
+__all__ = ["SearchSpec", "canonical_method", "length_bucket",
+           "SERIAL_METHODS", "JAX_METHODS", "METHOD_ALIASES",
+           "RAW_CAPABLE"]
+
+#: paper-faithful serial implementations (exact distance-call counting)
+SERIAL_METHODS = ("brute", "hotsax", "hst", "dadd", "rra")
+#: TPU-native blocked JAX implementations (canonical names)
+JAX_METHODS = ("hst_jax", "matrix_profile", "ring", "drag")
+#: accepted alternate spellings -> canonical name
+METHOD_ALIASES = {
+    "distributed": "ring",      # core/api historic name
+    "ring_mp": "ring",
+    "scamp": "matrix_profile",
+    "mp": "matrix_profile",
+}
+#: methods that honor znorm=False (everything else is Eq. (3)-only and
+#: would silently z-normalize — rejected at spec validation)
+RAW_CAPABLE = ("brute", "hst", "matrix_profile")
+
+
+def canonical_method(method: str) -> str:
+    """Map any accepted spelling to the canonical method name."""
+    m = METHOD_ALIASES.get(method, method)
+    if m not in SERIAL_METHODS + JAX_METHODS:
+        raise ValueError(
+            f"unknown method {method!r}; pick one of "
+            f"{SERIAL_METHODS + JAX_METHODS} "
+            f"(aliases: {sorted(METHOD_ALIASES)})")
+    return m
+
+
+def length_bucket(n: int, lo: int = 256) -> int:
+    """Smallest power of two >= max(n, lo) — the ServeEngine prompt-
+    bucket rule applied to series length, bounding recompiles while the
+    masked padding keeps results exact."""
+    b = int(lo)
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass(frozen=True)
+class SearchSpec:
+    """Frozen description of a discord search (hashable plan-cache key).
+
+    Fields
+    ------
+    s       window length, or a tuple of lengths for multi-window
+            search (multi-window requires ``method="matrix_profile"``)
+    k       number of discords
+    method  canonical algorithm name (aliases accepted, see
+            :func:`canonical_method`)
+    znorm   Eq. (3) z-normalized distance (True) or raw Euclidean
+            (False, DADD's convention — used by the telemetry
+            monitor; only ``brute | hst | matrix_profile`` honor it,
+            other methods are rejected at validation)
+    backend distance-tile backend (``numpy`` | ``xla`` | ``pallas``) or
+            None for the registry's resolution order (env, hardware)
+    P, alpha  SAX word length / alphabet size (hotsax, hst, rra)
+    seed    RNG seed for the randomized orders / sampling recipes
+    r       DADD/DRAG abandon threshold (None = paper sampling recipe)
+    block   candidate tile side of the engine's plan-cached profile
+            paths (``hst_jax`` keeps its own ``block=`` search kwarg;
+            ring/drag shard by device instead)
+    """
+    s: Union[int, Tuple[int, ...]]
+    k: int = 1
+    method: str = "hst"
+    znorm: bool = True
+    backend: Optional[str] = None
+    P: int = 4
+    alpha: int = 4
+    seed: int = 0
+    r: Optional[float] = None
+    block: int = 256
+
+    def __post_init__(self):
+        # normalize: list/tuple s -> tuple of ints, scalar -> int
+        s = self.s
+        if isinstance(s, (list, tuple)):
+            s = tuple(int(v) for v in s)
+            if len(s) == 1:
+                s = s[0]
+        else:
+            s = int(s)
+        object.__setattr__(self, "s", s)
+        object.__setattr__(self, "method", canonical_method(self.method))
+        if self.backend is not None:
+            from ..kernels.registry import resolve_backend
+            object.__setattr__(self, "backend",
+                               resolve_backend(self.backend))
+        for name in ("k", "P", "alpha", "seed", "block"):
+            object.__setattr__(self, name, int(getattr(self, name)))
+        object.__setattr__(self, "znorm", bool(self.znorm))
+        if self.r is not None:
+            object.__setattr__(self, "r", float(self.r))
+        for name in ("k", "P", "alpha", "block"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        for sv in self.windows:
+            if sv < 2:
+                raise ValueError(f"window length must be >= 2, got {sv}")
+        if len(set(self.windows)) != len(self.windows):
+            raise ValueError(f"duplicate window lengths in s={self.s}")
+        if self.multi_window and self.method != "matrix_profile":
+            raise ValueError(
+                "multi-window search (tuple s) requires "
+                "method='matrix_profile'; got "
+                f"method={self.method!r}")
+        if not self.znorm and self.method not in RAW_CAPABLE:
+            raise ValueError(
+                f"znorm=False (raw Euclidean) is only supported by "
+                f"{RAW_CAPABLE}; method={self.method!r} would "
+                "silently z-normalize")
+        if self.r is not None and not self.r > 0:
+            raise ValueError(f"r must be positive, got {self.r}")
+
+    # ------------------------------------------------------------------
+    @property
+    def windows(self) -> Tuple[int, ...]:
+        """Window lengths as a tuple (length 1 for a scalar spec)."""
+        return self.s if isinstance(self.s, tuple) else (self.s,)
+
+    @property
+    def multi_window(self) -> bool:
+        return isinstance(self.s, tuple)
+
+    def replace(self, **changes) -> "SearchSpec":
+        """Functional update (re-validated)."""
+        return replace(self, **changes)
+
+    def __str__(self) -> str:
+        be = self.backend or "auto"
+        return (f"SearchSpec(s={self.s}, k={self.k}, "
+                f"method={self.method}, backend={be}, "
+                f"znorm={self.znorm})")

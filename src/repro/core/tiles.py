@@ -118,26 +118,81 @@ class TileEngine:
     """
 
     def __init__(self, series, s: int, *, block: int = 256,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, n_valid=None,
+                 znorm: bool = True):
+        """``n_valid`` (optional, may be a *traced* scalar) marks how
+        many leading windows hold real data; the rest are plan-cache
+        padding whose ids are remapped to -1 so every backend masks
+        them to +inf.  Left as None, the series' own length decides
+        (the original static behavior, trace-identical).
+
+        ``znorm=False`` switches the engine to raw Euclidean
+        distances (DADD's convention).  The pluggable backends only
+        speak Eq. (3); raw tiles are recovered from them exactly by a
+        rank-1 norm correction — see ``_raw_d2``.
+        """
         self.s = int(s)
         self.block = int(block)
         self.backend = resolve_backend(backend)
+        self.znorm = bool(znorm)
         x = jnp.asarray(series, jnp.float32)
         self.n = x.shape[0] - self.s + 1
         self.nb = ceil_div(self.n, self.block)
         n_pad = self.nb * self.block
         L_need = n_pad + self.s - 1
         self.series_pad = jnp.pad(x, (0, max(0, L_need - x.shape[0])))
-        mu, sig = sliding_stats_jnp(x, self.s)
-        self.mu_pad = jnp.pad(mu, (0, n_pad - self.n))
-        self.sig_pad = jnp.pad(sig, (0, n_pad - self.n),
-                               constant_values=1.0)
+        self._dyn = n_valid is not None
+        self.n_valid = self.n if n_valid is None else n_valid
+        if self.znorm:
+            mu, sig = sliding_stats_jnp(x, self.s)
+            self.mu_pad = jnp.pad(mu, (0, n_pad - self.n))
+            self.sig_pad = jnp.pad(sig, (0, n_pad - self.n),
+                                   constant_values=1.0)
+        else:
+            # Raw mode: neutral stats (mu=0, sig=1) turn the backends'
+            # Eq. (3) tile into 2s - 2<q,c>; the true raw d2 is then
+            # ||q||^2 + ||c||^2 - 2<q,c>, recovered in _raw_d2 from the
+            # per-window squared norms.  The series is pre-scaled so
+            # every window norm is <= sqrt(s): by Cauchy-Schwarz no dot
+            # product can exceed s, keeping the backends' max(., 0)
+            # clamp inactive (the 1e-3 headroom absorbs f32 rounding).
+            csum2 = jnp.concatenate(
+                [jnp.zeros(1, jnp.float32),
+                 jnp.cumsum(self.series_pad * self.series_pad)])
+            self.nrm_pad = csum2[self.s:self.s + n_pad] - csum2[:n_pad]
+            mx = jnp.max(self.nrm_pad)
+            g = jnp.sqrt(jnp.float32(self.s)) / (
+                jnp.sqrt(jnp.maximum(mx, 1e-30)) * 1.001)
+            self._g = jnp.where(mx > 0, g, 1.0)
+            self.series_pad = self.series_pad * self._g
+            self.mu_pad = jnp.zeros(n_pad, jnp.float32)
+            self.sig_pad = jnp.ones(n_pad, jnp.float32)
+
+    def _mask_ids(self, ids):
+        """Remap plan-cache padding windows (id >= n_valid) to -1 so
+        the backends' id mask retires them; identity when the engine
+        was built without a dynamic n_valid."""
+        if not self._dyn:
+            return ids
+        return jnp.where(ids < self.n_valid, ids, jnp.int32(-1))
+
+    def _raw_d2(self, t, qids, cids):
+        """Invert the neutral-stats Eq. (3) tile to raw Euclidean d2.
+
+        t = 2s - 2*g^2*<q,c> (masked lanes +inf) ->
+        d2 = ||q||^2 + ||c||^2 - (2s - t)/g^2, clamped at 0.
+        """
+        top = self.nrm_pad.shape[0] - 1
+        nq = self.nrm_pad[jnp.clip(qids, 0, top)]
+        nc = self.nrm_pad[jnp.clip(cids, 0, top)]
+        dots2 = (2.0 * self.s - t) / (self._g * self._g)
+        return jnp.maximum(nq[:, None] + nc[None, :] - dots2, 0.0)
 
     # -- block constructors -------------------------------------------
     def query_block(self, ids) -> TileBlock:
         """Gathered windows at arbitrary ids (clipped for the gather;
         the *raw* ids are kept so out-of-range lanes mask to +inf)."""
-        ids = jnp.asarray(ids, jnp.int32)
+        ids = self._mask_ids(jnp.asarray(ids, jnp.int32))
         safe = jnp.clip(ids, 0, self.n - 1)
         win = self.series_pad[safe[:, None] + jnp.arange(self.s)[None, :]]
         return TileBlock(win, self.mu_pad[safe], self.sig_pad[safe], ids)
@@ -152,7 +207,7 @@ class TileEngine:
             win,
             lax.dynamic_slice(self.mu_pad, (c0,), (self.block,)),
             lax.dynamic_slice(self.sig_pad, (c0,), (self.block,)),
-            c0 + jnp.arange(self.block, dtype=jnp.int32))
+            self._mask_ids(c0 + jnp.arange(self.block, dtype=jnp.int32)))
 
     def all_windows(self) -> TileBlock:
         """Every (padded) window, materialized — candidate side of the
@@ -161,13 +216,17 @@ class TileEngine:
         win = self.series_pad[jnp.arange(n_pad)[:, None]
                               + jnp.arange(self.s)[None, :]]
         return TileBlock(win, self.mu_pad, self.sig_pad,
-                         jnp.arange(n_pad, dtype=jnp.int32))
+                         self._mask_ids(jnp.arange(n_pad,
+                                                   dtype=jnp.int32)))
 
     # -- tile ops ------------------------------------------------------
     def d2(self, q: TileBlock, c: TileBlock,
            backend: Optional[str] = None) -> jnp.ndarray:
-        return tile_d2(q, c, s=self.s, n_valid=self.n,
-                       backend=backend or self.backend)
+        t = tile_d2(q, c, s=self.s, n_valid=self.n,
+                    backend=backend or self.backend)
+        if self.znorm:
+            return t
+        return self._raw_d2(t, q.ids, c.ids)
 
     def sweep(self, q: TileBlock, c0, *, backend: Optional[str] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -179,7 +238,7 @@ class TileEngine:
         and handed to the window-block backend.  Returns (d2, cid).
         """
         backend = resolve_backend(backend or self.backend)
-        cid = c0 + jnp.arange(self.block, dtype=jnp.int32)
+        cid = self._mask_ids(c0 + jnp.arange(self.block, dtype=jnp.int32))
         if backend == "pallas":
             from ..kernels.mpblock.kernel import qvc_block_pallas
             chunk = lax.dynamic_slice(self.series_pad, (c0,),
@@ -190,6 +249,8 @@ class TileEngine:
                 q.win, q.mu, q.sig, q.ids, chunk, cmu, csig, cid,
                 s=self.s, n_valid=self.n,
                 interpret=default_interpret())
+            if not self.znorm:
+                d2 = self._raw_d2(d2, q.ids, cid)
             return d2, cid
         return self.d2(q, self.contiguous_block(c0), backend), cid
 
@@ -204,9 +265,14 @@ class TileEngine:
         backends run a blocked row sweep through the registry.
         ``interpret`` overrides the pallas interpret-mode auto-detect
         (debug hook; ignored by the other backends).
+
+        The mpblock kernel bakes ``n_valid`` in as a static parameter
+        and only speaks Eq. (3), so engines built with a dynamic
+        ``n_valid`` (plan-cache bucketing) or ``znorm=False`` take the
+        generic blocked sweep on every backend, pallas included.
         """
         backend = resolve_backend(backend or self.backend)
-        if backend == "pallas":
+        if backend == "pallas" and self.znorm and not self._dyn:
             from ..kernels.mpblock.kernel import mp_block_pallas
             if interpret is None:
                 interpret = default_interpret()

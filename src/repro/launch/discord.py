@@ -1,7 +1,13 @@
 """Discord-search launcher (Plane A CLI).
 
+Builds a typed ``SearchSpec`` from argv and runs it through one
+``DiscordEngine`` session — the same code path as the library API, for
+every method (``ring``/``distributed`` are the same engine; both
+spellings are accepted).
+
     python -m repro.launch.discord --method hst --n 20000 --s 120 -k 3
-    python -m repro.launch.discord --method drag --devices 8 ...
+    python -m repro.launch.discord --method ring --backend xla ...
+    python -m repro.launch.discord --method matrix_profile --s 96,128
 """
 from __future__ import annotations
 
@@ -9,46 +15,67 @@ import argparse
 
 import numpy as np
 
+from repro.core import DiscordEngine, SearchSpec
+from repro.core.spec import (JAX_METHODS, METHOD_ALIASES,
+                             SERIAL_METHODS)
 from repro.data import sine_noise, with_implanted_anomalies
+
+METHOD_CHOICES = sorted(set(SERIAL_METHODS) | set(JAX_METHODS)
+                        | set(METHOD_ALIASES))
+
+
+def _parse_s(text: str):
+    """``"120"`` -> 120, ``"96,128"`` -> (96, 128) (multi-window)."""
+    parts = [int(p) for p in text.split(",") if p]
+    return parts[0] if len(parts) == 1 else tuple(parts)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", default="hst",
-                    choices=["brute", "hotsax", "hst", "dadd", "rra",
-                             "hst_jax", "matrix_profile", "ring",
-                             "drag"])
+    ap.add_argument("--method", default="hst", choices=METHOD_CHOICES,
+                    help="canonical names plus accepted aliases "
+                         "(distributed == ring)")
     ap.add_argument("--file", help="1-column text file of points")
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--E", type=float, default=0.5)
     ap.add_argument("--anomalies", type=int, default=2)
-    ap.add_argument("--s", type=int, default=120)
+    ap.add_argument("--s", type=_parse_s, default=120,
+                    help="window length, or comma list for "
+                         "multi-window matrix_profile search")
     ap.add_argument("-k", type=int, default=1)
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--alpha", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--r", type=float, default=None,
+                    help="DADD/DRAG abandon threshold (default: paper "
+                         "sampling recipe)")
+    ap.add_argument("--backend", default=None,
+                    choices=["numpy", "xla", "pallas"],
+                    help="distance-tile backend for the jax methods")
+    ap.add_argument("--raw", action="store_true",
+                    help="raw Euclidean windows instead of Eq. (3) "
+                         "z-normalized (DADD's convention)")
     args = ap.parse_args(argv)
 
+    anchor = args.s if isinstance(args.s, int) else max(args.s)
     if args.file:
         x = np.loadtxt(args.file)
     else:
         x = sine_noise(args.n, E=args.E, seed=args.seed)
         x, pos = with_implanted_anomalies(
-            x, n_anomalies=args.anomalies, length=args.s,
+            x, n_anomalies=args.anomalies, length=anchor,
             amp=0.8, seed=args.seed)
         print(f"synthetic Eq.7 series, implanted at {pos}")
 
-    if args.method in ("ring", "drag"):
-        from repro.core.distributed import (distributed_discords,
-                                            drag_discords)
-        fn = distributed_discords if args.method == "ring" \
-            else drag_discords
-        res = fn(x, args.s, args.k)
-    else:
-        from repro.core import find_discords
-        res = find_discords(x, args.s, args.k, method=args.method,
-                            P=args.P, alpha=args.alpha, seed=args.seed)
-    print(res)
+    spec = SearchSpec(s=args.s, k=args.k, method=args.method,
+                      P=args.P, alpha=args.alpha, seed=args.seed,
+                      r=args.r, znorm=not args.raw,
+                      backend=args.backend)
+    engine = DiscordEngine(spec)
+    print(f"{spec} -> backend={engine.backend}")
+    res = engine.search(x)
+    for r in res if isinstance(res, list) else [res]:
+        print(r)
 
 
 if __name__ == "__main__":

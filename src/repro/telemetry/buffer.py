@@ -34,6 +34,11 @@ class MetricBuffer:
         return np.concatenate([self._data[name][i:],
                                self._data[name][:i]])
 
+    def count(self, name: str) -> int:
+        """Total points ever logged for ``name`` (> capacity once the
+        ring has wrapped and old points have been overwritten)."""
+        return self._n.get(name, 0)
+
     def names(self) -> List[str]:
         return list(self._data)
 

@@ -4,24 +4,51 @@ Training and serving emit time series (loss, grad-norm, per-expert
 router load, step wall-time, activation norms).  Anomalies in those
 series — loss spikes, data corruption, router collapse, a failing
 host — are exactly *discords*: windows maximally far from every other
-window.  The monitor runs the paper's HST (exact, cheap: the series
-are 1e3-1e5 points) over each registered metric and flags windows whose
-nnd stands out from the profile body.
+window.
+
+The monitor holds one persistent :class:`repro.core.DiscordStream` per
+registered metric: each scan *appends* only the points logged since
+the last scan and the stream's tail sweep updates the exact nnd
+profile incrementally — the per-scan from-scratch
+``exact_nnd_profile`` recompute is gone, and the significance
+threshold now comes from the true full profile instead of a
+subsampled stand-in.
 
 The significance rule follows Avogadro et al. 2020 ("significant
 discords"): a discord is flagged only when its nnd exceeds
 ``median(nnd_profile) + z * IQR`` — raw discords always exist (they are
 just the profile maxima), flags should not.
+
+Distances are raw Euclidean over the first difference of the metric
+(``SearchSpec(znorm=False)``): per-window z-normalization is
+level/magnitude-blind and telemetry anomalies are mostly magnitude
+events (tests/test_substrate.py); differencing turns level shifts into
+impulses and detrends drifting metrics.  Two practical notes:
+
+* The diffed series is standardized with a location/scale *frozen at
+  stream creation* (from the seed history).  Raw Euclidean distance is
+  invariant to the shift and equivariant to the scale, so flags and
+  positions are unaffected in exact arithmetic — but the centering is
+  what keeps the f32 tile math conditioned: a drifting metric has
+  diffs with a large common offset, and without centering the window
+  norms dwarf the tiny true distances (catastrophic cancellation in
+  ``||q||^2 + ||c||^2 - 2<q,c>``).  Freezing the parameters (instead
+  of refitting per scan, as the old implementation did) is what makes
+  the profile incrementally maintainable: every append is measured in
+  the same units as the stored profile.
+* Once the ring buffer wraps, the visible series stops being
+  append-only, so the stream is rebuilt per scan — over at most
+  ``max_scan_points`` recent points to bound the O(n^2) rebuild
+  (reported positions stay in visible-series index space).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import find_discords
-from repro.core.serial.brute import exact_nnd_profile
+from repro.core import DiscordEngine, DiscordStream, SearchSpec
 
 from .buffer import MetricBuffer
 
@@ -40,25 +67,86 @@ class MonitorReport:
 
 
 class DiscordMonitor:
-    """Periodic exact-discord scan over telemetry series."""
+    """Periodic exact-discord scan over telemetry series.
+
+    One engine (one spec, one plan cache) serves every metric; each
+    metric gets its own append-only profile stream.
+    """
 
     def __init__(self, buffer: MetricBuffer, *, window: int = 32,
                  k: int = 3, z: float = 3.0, min_points: int = 256,
-                 method: str = "hst", difference: bool = True):
+                 difference: bool = True,
+                 max_scan_points: int = 16_384,
+                 backend: Optional[str] = None):
         self.buffer = buffer
         self.window = window
         self.k = k
         self.z = z
         self.min_points = min_points
-        self.method = method
-        # Discords are found on the FIRST DIFFERENCE of the metric by
-        # default.  Z-normalized distance is level-blind: a plateau
-        # anomaly (level shift) in an otherwise noisy-flat series has
-        # *lower* nnd than the noise body (the edge windows pair up
-        # across the shift — measured in tests/test_substrate.py).
-        # Differencing turns level shifts into impulses, which are
-        # strong shape discords, and detrends drifting metrics.
         self.difference = difference
+        self.max_scan_points = max(int(max_scan_points),
+                                   min_points, 4 * window)
+        self.engine = DiscordEngine(SearchSpec(
+            s=window, k=k, method="matrix_profile", znorm=False,
+            backend=backend))
+        self._streams: Dict[str, DiscordStream] = {}
+        self._consumed: Dict[str, int] = {}   # raw points folded so far
+        self._norm: Dict[str, Tuple[float, float]] = {}   # frozen (loc, scale)
+        self._offset: Dict[str, int] = {}     # trimmed diff-space prefix
+        # post-wrap scans rebuild from scratch; (count, report) memo so
+        # back-to-back scans with no new points don't re-sweep O(n^2)
+        self._wrap_memo: Dict[str, Tuple[int, MonitorReport]] = {}
+
+    # ------------------------------------------------------------------
+    def _transformed(self, x: np.ndarray) -> np.ndarray:
+        return np.diff(x) if self.difference else x
+
+    def _forget(self, name: str) -> None:
+        for d in (self._streams, self._consumed, self._norm,
+                  self._offset):
+            d.pop(name, None)
+
+    def _seed_stream(self, x: np.ndarray) -> Tuple[DiscordStream, int,
+                                                   Tuple[float, float]]:
+        """Fresh stream over (at most) the trailing max_scan_points."""
+        x_scan = x[-self.max_scan_points:]
+        offset = x.shape[0] - x_scan.shape[0]   # == diff-space trim
+        t = self._transformed(x_scan)
+        loc = float(t.mean())
+        scale = float(max(t.std(), 1e-12))
+        stream = self.engine.open_stream(history=(t - loc) / scale)
+        return stream, offset, (loc, scale)
+
+    def _stream_for(self, name: str, x: np.ndarray
+                    ) -> Tuple[DiscordStream, int]:
+        """Persistent per-metric stream; appends only the new points.
+
+        Once the ring buffer wraps, the series stops being append-only
+        (old points retire), so the stream is rebuilt from the capped
+        visible window each scan — correctness first, incrementality
+        where the append-only precondition actually holds.
+        """
+        wrapped = self.buffer.count(name) > self.buffer.capacity
+        stream = self._streams.get(name)
+        if wrapped or stream is None:
+            stream, offset, norm = self._seed_stream(x)
+            if wrapped:
+                self._forget(name)
+            else:
+                self._streams[name] = stream
+                self._consumed[name] = x.shape[0]
+                self._norm[name] = norm
+                self._offset[name] = offset
+            return stream, offset
+        c = self._consumed[name]
+        if x.shape[0] > c:
+            # diff at the seam needs the previous raw point (c >= 1
+            # after any first scan passed the min_points gate)
+            new = np.diff(x[c - 1:]) if self.difference else x[c:]
+            loc, scale = self._norm[name]
+            stream.append((new - loc) / scale)
+            self._consumed[name] = x.shape[0]
+        return stream, self._offset[name]
 
     def scan_metric(self, name: str) -> Optional[MonitorReport]:
         x = self.buffer.series(name)
@@ -66,23 +154,28 @@ class DiscordMonitor:
             return None
         if np.allclose(x, x[0]):
             return MonitorReport(name, [], [], np.inf)
-        if self.difference:
-            x = np.diff(x)
-        # standardize ONCE globally, then search with raw Euclidean
-        # windows: per-window z-normalization is level/magnitude-blind
-        # and telemetry anomalies are mostly magnitude events (see
-        # module docstring + tests/test_substrate.py)
-        x = (x - x.mean()) / max(x.std(), 1e-12)
-        res = find_discords(x, self.window, self.k, method=self.method,
-                            P=4, alpha=4, znorm=False)
-        # significance threshold from a subsampled profile body
-        body = self._profile_body(x)
+        total = self.buffer.count(name)
+        wrapped = total > self.buffer.capacity
+        if wrapped:
+            memo = self._wrap_memo.get(name)
+            if memo is not None and memo[0] == total:
+                return memo[1]    # nothing new logged: skip the rebuild
+        stream, offset = self._stream_for(name, x)
+        prof = stream.profile()
+        body = prof[np.isfinite(prof)]
+        if body.size == 0:
+            return MonitorReport(name, [], [], np.inf)
         med = float(np.median(body))
         iqr = float(np.percentile(body, 75) - np.percentile(body, 25))
         thr = med + self.z * max(iqr, 1e-12)
-        flagged = [p for p, v in zip(res.positions, res.nnds)
-                   if v > thr and p >= 0]
-        return MonitorReport(name, res.positions, res.nnds, thr, flagged)
+        res = stream.discords(self.k)
+        positions = [p + offset for p in res.positions]
+        flagged = [p for p, v in zip(positions, res.nnds)
+                   if v > thr and p >= offset]
+        report = MonitorReport(name, positions, res.nnds, thr, flagged)
+        if wrapped:
+            self._wrap_memo[name] = (total, report)
+        return report
 
     def scan(self) -> Dict[str, MonitorReport]:
         out = {}
@@ -91,11 +184,3 @@ class DiscordMonitor:
             if rep is not None:
                 out[name] = rep
         return out
-
-    def _profile_body(self, x: np.ndarray, cap: int = 2048) -> np.ndarray:
-        """nnd profile of (a subsample of) the series, for thresholds."""
-        if x.shape[0] > cap:
-            stride = x.shape[0] // cap
-            x = x[: cap * stride: stride]
-        return exact_nnd_profile(x, min(self.window, x.shape[0] // 4),
-                                 znorm=False)
