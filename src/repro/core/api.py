@@ -26,7 +26,11 @@ wrappers constructing a one-shot engine (engines are cached per spec,
 so repeated wrapper calls still share compilations), emit a
 ``DeprecationWarning``, and will not grow new features.  ``method``
 accepts both the canonical ``ring`` and the legacy ``distributed``
-spelling.
+spelling; ring specs resolve their auto data-mesh (all local devices,
+or ``SearchSpec(ndev=...)``) inside the engine.  An *explicit*
+``jax.sharding.Mesh`` is a session-level argument
+(``DiscordEngine(spec, mesh=...)``) and is deliberately not exposed
+here — hold the engine yourself for custom placement.
 """
 from __future__ import annotations
 

@@ -2,9 +2,9 @@
 
 Parallelizing HST is the paper's own stated future work (Sec. 5); this
 module is the framework's beyond-paper contribution on Plane A.  Two
-engines, both exact:
+sweeps, both exact:
 
-1. ``ring_matrix_profile`` — the SCAMP-class full profile, distributed.
+1. The ring matrix profile — the SCAMP-class full profile, distributed.
    Every device owns one contiguous *query* block of windows and one
    *candidate* block.  The candidate blocks travel around the ring with
    ``lax.ppermute`` while each device folds the visiting block into its
@@ -13,15 +13,25 @@ engines, both exact:
    a TPU pod: the "disk" is the other devices' HBM (DESIGN.md §7.5), and
    the permute traffic overlaps with the local MXU tile work.
 
+   Since the session fold-in (docs/ARCHITECTURE.md) the ring sweep is
+   a first-class *plan kind* of :class:`repro.core.engine.DiscordEngine`
+   — length-bucketed, plan-cached under ``(kind, s, bucket,
+   mesh-shape)``, serving batched and streaming traffic.  This module
+   keeps the shard-local hop body (:func:`_ring_mp_shard`, reused by
+   the engine's plans) and thin wrappers (``ring_matrix_profile``,
+   ``distributed_discords``) that route through a session.
+
 2. ``drag_discords`` — the DRAG/DADD two-phase search, distributed:
    phase 1 sweeps the ring once with *early block abandonment* at a
    threshold ``r`` (each device kills its local candidates whose running
    nnd drops below ``r``), phase 2 ranks the survivors' exact nnds.
    With a well-chosen ``r`` (the paper's sampling recipe) phase 1 kills
    ~everything and total work approaches O(N²/ndev) *scanned* but with
-   the block-abandon short-circuit most tiles are skipped.
+   the block-abandon short-circuit most tiles are skipped.  The retry
+   loop is data-dependent (r halves until k survivors), so DRAG stays a
+   standalone sweep dispatched by the engine rather than a cached plan.
 
-Exactness argument: both engines only ever *lower* upper bounds by real
+Exactness argument: both sweeps only ever *lower* upper bounds by real
 distance evaluations over the complete candidate set, so the returned
 maxima coincide with the serial algorithms' (tested in
 tests/test_distributed.py against brute force).
@@ -39,22 +49,16 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..parallel.sharding import SERIES_AXIS as AXIS, series_mesh
 from .result import DiscordResult
 from .tiles import (TileBlock, resolve_backend, tile_d2, tile_mins,
                     topk_nonoverlapping)
 
-AXIS = "shard"
-
 # older jax has no lax.pvary (newer strict-replication checker needs it)
 _pvary = getattr(lax, "pvary", lambda x, axes: x)
 
-
-def data_mesh(ndev: Optional[int] = None) -> Mesh:
-    """1-D mesh over all (or the first ndev) local devices."""
-    devs = jax.devices()
-    if ndev is not None:
-        devs = devs[:ndev]
-    return Mesh(np.array(devs), (AXIS,))
+#: legacy name of :func:`repro.parallel.sharding.series_mesh`
+data_mesh = series_mesh
 
 
 # ----------------------------------------------------------------------
@@ -123,26 +127,17 @@ def _ring_mp_shard(qwin, qmu, qsig, qid, s: int, n: int, ndev: int,
 def ring_matrix_profile(series, s: int, *, mesh: Optional[Mesh] = None,
                         backend: Optional[str] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
-    """Exact distributed matrix profile: (nnd, neighbor) per window."""
-    mesh = mesh or data_mesh()
-    ndev = mesh.devices.size
-    backend = resolve_backend(backend)
-    win, mu, sig, ids, n, per = _pack_blocks(series, s, ndev)
-    sh = NamedSharding(mesh, P(AXIS))
-    sh2 = NamedSharding(mesh, P(AXIS, None))
+    """Exact distributed matrix profile: (nnd, neighbor) per window.
 
-    body = functools.partial(_ring_mp_shard, s=s, n=n, ndev=ndev,
-                             backend=backend)
-    # check_rep=False: pallas_call has no replication rule, and the
-    # tile backend must stay selectable inside the shard body
-    f = shard_map(body, mesh=mesh,
-                  in_specs=(P(AXIS, None), P(AXIS), P(AXIS), P(AXIS)),
-                  out_specs=(P(AXIS), P(AXIS)), check_rep=False)
-    f = jax.jit(f)
-    d2, arg = f(jax.device_put(win, sh2), jax.device_put(mu, sh),
-                jax.device_put(sig, sh), jax.device_put(ids, sh))
-    d = np.sqrt(np.asarray(d2)[:n])
-    return d, np.asarray(arg)[:n]
+    Thin wrapper: builds a one-shot ring session and runs its
+    plan-cached mesh sweep (hold a ``DiscordEngine`` yourself to reuse
+    the compiled plan across calls)."""
+    from .engine import DiscordEngine
+    from .spec import SearchSpec
+    eng = DiscordEngine(SearchSpec(s=s, method="ring", backend=backend),
+                        mesh=mesh)
+    prof, ngh, *_ = eng._ring_profile(series, s)
+    return prof, ngh
 
 
 # ----------------------------------------------------------------------
@@ -233,24 +228,25 @@ def drag_discords(series, s: int, k: int = 1, *, r: Optional[float] = None,
         r = r / 2.0           # self-healing re-run (paper Sec 4.4)
         retries += 1
 
+    lanes = int(n) * int(per) * ndev         # scanned-lane upper bound
     return DiscordResult(
-        positions=pos, nnds=vals,
-        calls=int(n) * int(per) * ndev,      # scanned-lane upper bound
+        positions=pos, nnds=vals, calls=lanes,
         n=n, s=s, method=f"drag[{ndev}dev]",
-        runtime_s=time.perf_counter() - t0,
-        extra={"r": float(r), "retries": retries,
+        runtime_s=time.perf_counter() - t0, tile_lanes=lanes,
+        extra={"r": float(r), "retries": retries, "tile_lanes": lanes,
                "survivors": int(alive.sum()), "ndev": ndev})
 
 
 def distributed_discords(series, s: int, k: int = 1, *,
                          mesh: Optional[Mesh] = None,
                          backend: Optional[str] = None) -> DiscordResult:
-    """Exact k discords from the ring matrix profile (SCAMP-class)."""
-    t0 = time.perf_counter()
-    mesh = mesh or data_mesh()
-    d, arg = ring_matrix_profile(series, s, mesh=mesh, backend=backend)
-    n = d.shape[0]
-    pos, vals = topk_nonoverlapping(d, k, s)
-    return DiscordResult(positions=pos, nnds=vals, calls=n * n, n=n, s=s,
-                         method=f"ring_mp[{mesh.devices.size}dev]",
-                         runtime_s=time.perf_counter() - t0)
+    """Exact k discords from the ring matrix profile (SCAMP-class).
+
+    Thin wrapper over the session layer: one-shot
+    ``DiscordEngine(SearchSpec(method="ring"), mesh=...).search`` —
+    hold the engine yourself to amortize the compiled ring plan."""
+    from .engine import DiscordEngine
+    from .spec import SearchSpec
+    eng = DiscordEngine(SearchSpec(s=s, k=k, method="ring",
+                                   backend=backend), mesh=mesh)
+    return eng.search(series)

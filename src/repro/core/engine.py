@@ -27,11 +27,34 @@ carries that state:
     minima folded back into the old profile) instead of the full
     O(N^2) sweep.
 
+Mesh-sharded plan family (the ring fold-in, docs/ARCHITECTURE.md):
+    ``method="ring"`` — or an explicit ``mesh=`` / ``SearchSpec(ndev=)``
+    placement — makes the multi-device ring sweep of
+    ``core/distributed`` a first-class plan *kind* of this cache, keyed
+    ``(kind, s, length-bucket, mesh-shape)``.  The plan builds
+    length-bucketed ``TileEngine`` window blocks, pads the window count
+    so every per-device shard stays a multiple of ``spec.block``
+    (MXU-aligned), and runs the same ``ppermute`` hop body as the
+    standalone module under ``shard_map`` — so repeated sharded
+    searches hit zero new traces exactly like local ones.  Sharded
+    engines also route ``search_batched`` through a two-level layout
+    (series-parallel across devices; ring per series past
+    ``REPRO_RING_SERIES_THRESHOLD`` windows) and ``DiscordStream``
+    appends through a sharded tail plan in which each device sweeps
+    only its own candidate shard against the new tail windows and the
+    per-shard minima are min-folded globally.
+
 Every compiled plan body bumps ``stats.traces`` when (and only when)
 it is traced, so tests can assert the compile-once contract directly.
+
+Work accounting is unified across planes (docs/cps.md): every result
+reports ``calls`` (= swept ``tile_lanes`` on this plane) and the
+derived ``cps``.
 """
 from __future__ import annotations
 
+import functools
+import os
 import time
 from dataclasses import dataclass
 from typing import List, Optional, Union
@@ -47,7 +70,16 @@ from .result import DiscordResult
 from .spec import SearchSpec, length_bucket
 from .tiles import TileEngine, topk_nonoverlapping
 
-__all__ = ["DiscordEngine", "DiscordStream", "EngineStats"]
+__all__ = ["DiscordEngine", "DiscordStream", "EngineStats",
+           "ring_series_threshold"]
+
+
+def ring_series_threshold() -> int:
+    """Per-device series-length threshold (in windows) above which a
+    sharded ``search_batched`` switches from series-parallel layout to
+    a ring sweep per series.  Env-overridable so scaling tests can
+    exercise both layouts on small inputs."""
+    return int(os.environ.get("REPRO_RING_SERIES_THRESHOLD", 4096))
 
 
 @dataclass
@@ -86,9 +118,18 @@ class DiscordEngine:
         st = eng.open_stream(history=x)
         st.append(new_points)         # sweeps only the tail tile rows
         print(st.discords())
+
+    Mesh placement: pass an explicit 1-D ``jax.sharding.Mesh`` as
+    ``mesh=`` (normalized onto the series axis), or set
+    ``SearchSpec(ndev=...)`` for an auto data-mesh over the first
+    ``ndev`` local devices (``None`` = all of them).  A ``ring`` spec,
+    an explicit mesh, or ``ndev`` makes the session *sharded*: ring
+    searches, batched sweeps and stream appends then run mesh-wide,
+    plan-cached under ``(kind, s, length-bucket, mesh-shape)``.
     """
 
-    def __init__(self, spec: Optional[SearchSpec] = None, **spec_kwargs):
+    def __init__(self, spec: Optional[SearchSpec] = None, *,
+                 mesh=None, **spec_kwargs):
         if spec is None:
             spec = SearchSpec(**spec_kwargs)
         elif spec_kwargs:
@@ -103,10 +144,45 @@ class DiscordEngine:
         self.backend = resolve_backend(spec.backend)
         self.stats = EngineStats()
         self._plans: dict = {}
+        self._explicit_mesh = mesh is not None
+        self._mesh = None
+        if mesh is not None:
+            from ..parallel.sharding import as_series_mesh
+            self._mesh = as_series_mesh(mesh)
+            if (spec.ndev is not None
+                    and int(self._mesh.devices.size) != spec.ndev):
+                raise ValueError(
+                    f"mesh has {int(self._mesh.devices.size)} device(s) "
+                    f"but spec.ndev={spec.ndev}")
 
     def __repr__(self) -> str:
-        return (f"DiscordEngine({self.spec}, backend={self.backend}, "
-                f"plans={self.stats.plans}, traces={self.stats.traces})")
+        mesh = (f", ndev={int(self._mesh.devices.size)}"
+                if self._mesh is not None else "")
+        return (f"DiscordEngine({self.spec}, backend={self.backend}"
+                f"{mesh}, plans={self.stats.plans}, "
+                f"traces={self.stats.traces})")
+
+    # -- mesh placement ------------------------------------------------
+    @property
+    def sharded(self) -> bool:
+        """True when this session runs the mesh-sharded plan family
+        (ring/drag method, explicit mesh, or spec-pinned device
+        count)."""
+        return (self._explicit_mesh or self.spec.ndev is not None
+                or self.spec.method in ("ring", "drag"))
+
+    def _resolve_mesh(self):
+        """The session's series mesh (auto data-mesh on first use)."""
+        if self._mesh is None:
+            from ..parallel.sharding import series_mesh
+            self._mesh = series_mesh(self.spec.ndev)
+        return self._mesh
+
+    @property
+    def ndev(self) -> int:
+        """Device count of the sharded plan family (1 when local)."""
+        return (int(self._resolve_mesh().devices.size) if self.sharded
+                else 1)
 
     # -- plan cache ----------------------------------------------------
     def _n_pad(self, s: int, Lb: int) -> int:
@@ -134,23 +210,28 @@ class DiscordEngine:
             return fn
         return self._get_plan(("profile", s, Lb), build)
 
-    def _batched_plan(self, s: int, B: int, Lb: int):
-        """(stack (B, Lb), n_valid) -> (d2 (B, n_pad), neighbor)."""
+    def _profile_each(self, s: int, sub, n_valid):
+        """Per-series bucketed profile of a (b, Lb) stack — the one
+        batching rule shared by the local and sharded batched plans:
+        vmapped into one MXU sweep on ``xla``; scanned elsewhere
+        (pallas_call / pure_callback don't batch)."""
         spec, be = self.spec, self.backend
 
+        def one(x):
+            eng = TileEngine(x, s, block=spec.block, backend=be,
+                             znorm=spec.znorm, n_valid=n_valid)
+            return eng.profile()
+
+        if be == "xla":
+            return jax.vmap(one)(sub)
+        return lax.map(one, sub)
+
+    def _batched_plan(self, s: int, B: int, Lb: int):
+        """(stack (B, Lb), n_valid) -> (d2 (B, n_pad), neighbor)."""
         def build():
             def fn(stack, n_valid):
                 self.stats.traces += 1
-
-                def one(x):
-                    eng = TileEngine(x, s, block=spec.block, backend=be,
-                                     znorm=spec.znorm, n_valid=n_valid)
-                    return eng.profile()
-
-                if be == "xla":
-                    return jax.vmap(one)(stack)   # one MXU sweep
-                # pallas_call / pure_callback don't batch — scan instead
-                return lax.map(one, stack)
+                return self._profile_each(s, stack, n_valid)
             return fn
         return self._get_plan(("batched", s, B, Lb), build)
 
@@ -194,6 +275,149 @@ class DiscordEngine:
             return fn
         return self._get_plan(("tail", s, Lb, Qb), build)
 
+    # -- mesh-sharded plan family (the ring fold-in) -------------------
+    def _shard_geom(self, s: int, Lb: int, ndev: int):
+        """Window-count geometry of a sharded bucket-``Lb`` sweep:
+        ``(n_pad, per, n_sh)`` where ``n_pad`` is the tile grid's own
+        padded window count, ``per`` the per-device shard (rounded up
+        to a multiple of ``spec.block`` so shards stay MXU-aligned),
+        and ``n_sh = per * ndev`` the mesh-wide padded count."""
+        n_pad = self._n_pad(s, Lb)
+        per = ceil_div(n_pad // self.spec.block, ndev) * self.spec.block
+        return n_pad, per, per * ndev
+
+    def _sharded_blocks(self, eng: TileEngine, n_pad: int, n_sh: int):
+        """All (bucket-padded) windows of ``eng``, further padded to
+        the mesh-wide count ``n_sh`` with masked lanes (ids -1) so the
+        per-device shards split evenly and stay block-aligned."""
+        blk = eng.all_windows()          # padding ids already masked
+        pad = n_sh - n_pad
+        return (jnp.pad(blk.win, ((0, pad), (0, 0))),
+                jnp.pad(blk.mu, (0, pad)),
+                jnp.pad(blk.sig, (0, pad), constant_values=1.0),
+                jnp.pad(blk.ids, (0, pad), constant_values=-1))
+
+    def _ring_plan(self, s: int, Lb: int):
+        """(series_pad (Lb,), n_valid) -> (d2 (n_sh,), neighbor).
+
+        The ring matrix profile as a cached plan: every device owns one
+        block-aligned shard of query windows; candidate shards orbit
+        the ring via ``ppermute`` (the hop body shared with
+        ``core/distributed``) while each device min-folds the visiting
+        shard into its queries.  Masking is carried entirely by the
+        window ids, so one compiled plan serves every series in the
+        bucket — the compile-once contract, mesh-wide.
+        """
+        spec, be = self.spec, self.backend
+        self._require_znorm("the ring plan")
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+        n_pad, per, n_sh = self._shard_geom(s, Lb, ndev)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS, _ring_mp_shard
+
+            body = functools.partial(_ring_mp_shard, s=s, n=n_sh,
+                                     ndev=ndev, backend=be)
+            sweep = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(AXIS, None), P(AXIS), P(AXIS), P(AXIS)),
+                out_specs=(P(AXIS), P(AXIS)), check_rep=False)
+
+            def fn(series_pad, n_valid):
+                self.stats.traces += 1
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                return sweep(*self._sharded_blocks(eng, n_pad, n_sh))
+            return fn
+        return self._get_plan(("ring", s, Lb, (ndev,)), build)
+
+    def _batched_sharded_plan(self, s: int, Bp: int, Lb: int):
+        """(stack (Bp, Lb), n_valid (1,)) -> (d2 (Bp, n_pad), ngh).
+
+        Series-parallel level of the two-level batched layout: the
+        batch is sharded across devices and each device runs the local
+        bucketed profile sweep over its own sub-batch (vmapped on
+        ``xla``, scanned elsewhere — same rule as the local plan).
+        """
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS
+
+            def shard_body(sub, n_valid):
+                return self._profile_each(s, sub, n_valid[0])
+
+            sweep = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(AXIS, None), P(None)),
+                out_specs=(P(AXIS, None), P(AXIS, None)),
+                check_rep=False)
+
+            def fn(stack, n_valid):
+                self.stats.traces += 1
+                return sweep(stack, n_valid)
+            return fn
+        return self._get_plan(("batched_ring", s, Bp, Lb, (ndev,)),
+                              build)
+
+    def _tail_sharded_plan(self, s: int, Lb: int, Qb: int):
+        """Sharded streaming-append sweep: same contract as
+        ``_tail_plan`` but each device sweeps only the tail queries
+        against *its own* candidate shard; the per-shard row minima are
+        min-folded globally afterwards (the column side needs no fold —
+        every candidate has exactly one owning shard).
+        """
+        spec, be = self.spec, self.backend
+        self._require_znorm("the sharded tail plan")
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+        n_pad, per, n_sh = self._shard_geom(s, Lb, ndev)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS, _tile_d2
+
+            def shard_body(qwin, qmu, qsig, qid, cwin, cmu, csig, cid):
+                d2 = _tile_d2(qwin, qmu, qsig, qid,
+                              cwin, cmu, csig, cid, s, n_sh, be)
+                return (jnp.min(d2, axis=1)[None],
+                        cid[jnp.argmin(d2, axis=1)][None],
+                        jnp.min(d2, axis=0),
+                        qid[jnp.argmin(d2, axis=0)])
+
+            sweep = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(None, None), P(None), P(None), P(None),
+                          P(AXIS, None), P(AXIS), P(AXIS), P(AXIS)),
+                out_specs=(P(AXIS, None), P(AXIS, None),
+                           P(AXIS), P(AXIS)),
+                check_rep=False)
+
+            def fn(series_pad, q0, n_valid):
+                self.stats.traces += 1
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+                q = eng.query_block(qids)
+                rm, ra, cm, ca = sweep(
+                    q.win, q.mu, q.sig, q.ids,
+                    *self._sharded_blocks(eng, n_pad, n_sh))
+                sel = jnp.argmin(rm, axis=0)[None]     # global min-fold
+                row_d2 = jnp.take_along_axis(rm, sel, axis=0)[0]
+                row_ngh = jnp.take_along_axis(ra, sel, axis=0)[0]
+                return row_d2, row_ngh, cm, ca
+            return fn
+        return self._get_plan(("tail_ring", s, Lb, Qb, (ndev,)), build)
+
     # -- searches ------------------------------------------------------
     def search(self, series, **kw
                ) -> Union[DiscordResult, List[DiscordResult]]:
@@ -217,6 +441,13 @@ class DiscordEngine:
                                 "described by the spec and takes no "
                                 f"extra kwargs, got {sorted(kw)}")
             return self._search_profile(series, spec.s)
+        if spec.method == "ring":
+            if kw:
+                raise TypeError("ring search is fully described by "
+                                "the spec and mesh placement and takes "
+                                f"no extra kwargs, got {sorted(kw)}")
+            self.stats.searches += 1
+            return self._search_ring(series)
         return self._dispatch(series, **kw)
 
     def _search_profile(self, series, s: int) -> DiscordResult:
@@ -241,15 +472,68 @@ class DiscordEngine:
         self.stats.tile_lanes += lanes
         return DiscordResult(
             positions=pos, nnds=vals,
-            calls=n_true * n_true,            # SCAMP's O(N^2) work model
+            calls=lanes,                  # swept tile lanes (docs/cps.md)
             n=n_true, s=s, method=f"scamp[{self.backend}]",
-            runtime_s=time.perf_counter() - t0,
+            runtime_s=time.perf_counter() - t0, tile_lanes=lanes,
             extra={"backend": self.backend, "bucket": Lb,
+                   "tile_lanes": lanes, "znorm": self.spec.znorm})
+
+    def _ring_exec(self, s: int, Lb: int, series_pad, n_valid):
+        """One ring-plan invocation — the single source of the mesh
+        lane formula (``per^2`` per device per hop, ``ndev`` hops,
+        ``ndev`` devices).  Returns ``(d2, arg, lanes, ndev)``; the
+        caller owns the stats fold."""
+        ndev = int(self._resolve_mesh().devices.size)
+        d2, arg = self._ring_plan(s, Lb)(series_pad, n_valid)
+        _, per, n_sh = self._shard_geom(s, Lb, ndev)
+        return d2, arg, n_sh * per * ndev, ndev
+
+    def _ring_profile(self, series, s: int):
+        """Mesh-sharded exact (nnd, ngh) of every true window, through
+        the plan cache.  Returns ``(prof, ngh, lanes, Lb, ndev,
+        n_true)``."""
+        x = np.asarray(series, np.float64).ravel()
+        L = x.shape[0]
+        if L < s + 1:
+            raise ValueError(f"series of {L} points is too short for "
+                             f"window s={s}")
+        n_true = L - s + 1
+        Lb = length_bucket(L)
+        xp = np.zeros(Lb, np.float32)
+        xp[:L] = x
+        d2, arg, lanes, ndev = self._ring_exec(s, Lb, jnp.asarray(xp),
+                                               np.int32(n_true))
+        prof = np.sqrt(np.asarray(d2, np.float64)[:n_true])
+        ngh = np.asarray(arg, np.int64)[:n_true]
+        self.stats.tile_lanes += lanes
+        return prof, ngh, lanes, Lb, ndev, n_true
+
+    def _search_ring(self, series) -> DiscordResult:
+        """Top-k discords via the mesh-sharded ring plan.  Callers own
+        the ``stats.searches`` bump (one per API call, so a batched
+        ring-per-series layout still counts as one search)."""
+        t0 = time.perf_counter()
+        s = self.spec.s
+        prof, _ngh, lanes, Lb, ndev, n_true = self._ring_profile(series,
+                                                                 s)
+        pos, vals = topk_nonoverlapping(
+            np.where(np.isfinite(prof), prof, -np.inf), self.spec.k, s)
+        return DiscordResult(
+            positions=pos, nnds=vals, calls=lanes, n=n_true, s=s,
+            method=f"ring_mp[{ndev}dev|{self.backend}]",
+            runtime_s=time.perf_counter() - t0, tile_lanes=lanes,
+            extra={"backend": self.backend, "bucket": Lb, "ndev": ndev,
                    "tile_lanes": lanes, "znorm": self.spec.znorm})
 
     def search_batched(self, series_batch) -> List[DiscordResult]:
         """Top-k discords of every series in a (B, L) stack — one
         plan-cached sweep (vmapped on ``xla``, scanned elsewhere).
+
+        Sharded sessions route through a two-level layout: the batch
+        is series-parallel across the mesh devices (each device sweeps
+        its own sub-batch locally), except when the series are longer
+        than :func:`ring_series_threshold` windows — then each series
+        is itself ring-sharded mesh-wide, one after another.
 
         Timing is honest: every result carries the true per-batch wall
         clock in ``runtime_s`` (first call includes the one-time
@@ -259,6 +543,7 @@ class DiscordEngine:
         see the real cost.
         """
         spec = self.spec
+        self._require_profile_plan("search_batched")
         if spec.multi_window:
             raise ValueError("search_batched needs a scalar-s spec")
         s = spec.s
@@ -268,6 +553,8 @@ class DiscordEngine:
         if L < s + 1:
             raise ValueError(f"series of {L} points is too short for "
                              f"window s={s}")
+        if self.sharded:
+            return self._search_batched_sharded(xb, t0)
         n_true = L - s + 1
         Lb = length_bucket(L)
         xbp = np.zeros((B, Lb), np.float32)
@@ -276,7 +563,8 @@ class DiscordEngine:
                                                   np.int32(n_true))
         profs = np.sqrt(np.asarray(d2b, np.float64)[:, :n_true])
         elapsed = time.perf_counter() - t0
-        lanes = B * self._n_pad(s, Lb) ** 2
+        per_lanes = self._n_pad(s, Lb) ** 2
+        lanes = B * per_lanes
         self.stats.searches += 1
         self.stats.tile_lanes += lanes
         out: List[DiscordResult] = []
@@ -284,21 +572,106 @@ class DiscordEngine:
             prof = np.where(np.isfinite(profs[b]), profs[b], -np.inf)
             pos, vals = topk_nonoverlapping(prof, spec.k, s)
             out.append(DiscordResult(
-                positions=pos, nnds=vals, calls=n_true * n_true,
+                positions=pos, nnds=vals, calls=per_lanes,
                 n=n_true, s=s, method=f"batched_mp[{self.backend}]",
-                runtime_s=elapsed,
+                runtime_s=elapsed, tile_lanes=per_lanes,
                 extra={"batch_size": B, "batch_index": b,
                        "backend": self.backend, "bucket": Lb,
                        "per_series_s": elapsed / B,
                        "tile_lanes": lanes}))
         return out
 
+    def _search_batched_sharded(self, xb: np.ndarray, t0: float
+                                ) -> List[DiscordResult]:
+        """Two-level mesh layout of a batched search (see
+        ``search_batched``)."""
+        spec, s = self.spec, self.spec.s
+        B, L = xb.shape
+        n_true = L - s + 1
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+        # the ring plans speak Eq. (3) only (no raw-mode inversion), so
+        # a raw sharded batch always takes the series-parallel layout,
+        # whose per-device profile sweep handles znorm=False exactly
+        if n_true > ring_series_threshold() and spec.znorm:
+            # level 2: each series is ring-sharded across the mesh
+            out = []
+            for b in range(B):
+                r = self._search_ring(xb[b])
+                r.extra["layout"] = "ring-per-series"
+                out.append(r)
+            # honest batch timing, same contract as the other layouts:
+            # runtime_s = the true per-batch wall clock on every result
+            elapsed = time.perf_counter() - t0
+            total_lanes = sum(r.tile_lanes for r in out)
+            for b, r in enumerate(out):
+                r.runtime_s = elapsed
+                r.extra.update(batch_size=B, batch_index=b,
+                               per_series_s=elapsed / B,
+                               tile_lanes=total_lanes)
+            self.stats.searches += 1
+            return out
+        # level 1: series-parallel — pad the batch to a device multiple
+        Lb = length_bucket(L)
+        Bp = ceil_div(B, ndev) * ndev
+        xbp = np.zeros((Bp, Lb), np.float32)
+        xbp[:B, :L] = xb
+        d2b, _argb = self._batched_sharded_plan(s, Bp, Lb)(
+            jnp.asarray(xbp), jnp.full((1,), n_true, jnp.int32))
+        profs = np.sqrt(np.asarray(d2b, np.float64)[:B, :n_true])
+        elapsed = time.perf_counter() - t0
+        per_lanes = self._n_pad(s, Lb) ** 2
+        lanes = Bp * per_lanes
+        self.stats.searches += 1
+        self.stats.tile_lanes += lanes
+        out = []
+        for b in range(B):
+            prof = np.where(np.isfinite(profs[b]), profs[b], -np.inf)
+            pos, vals = topk_nonoverlapping(prof, spec.k, s)
+            out.append(DiscordResult(
+                positions=pos, nnds=vals, calls=per_lanes,
+                n=n_true, s=s,
+                method=f"batched_mp[{ndev}dev|{self.backend}]",
+                runtime_s=elapsed, tile_lanes=per_lanes,
+                extra={"batch_size": B, "batch_index": b,
+                       "backend": self.backend, "bucket": Lb,
+                       "ndev": ndev, "layout": "series-parallel",
+                       "per_series_s": elapsed / B,
+                       "tile_lanes": lanes}))
+        return out
+
     # -- streaming -----------------------------------------------------
+    def _require_profile_plan(self, op: str) -> None:
+        """Batched/stream entry points run the exact-profile plan
+        family only — anything else would silently ignore the spec's
+        method semantics (e.g. drag's threshold, hst's counted
+        plane)."""
+        if self.spec.method not in ("matrix_profile", "ring"):
+            raise ValueError(
+                f"{op} runs the exact-profile plan family and needs "
+                f"method='matrix_profile' (local) or 'ring' "
+                f"(mesh-sharded); got method={self.spec.method!r}")
+
+    def _require_znorm(self, what: str) -> None:
+        """The sharded plans feed Eq. (3) tiles straight through the
+        ring/min-fold bodies with no raw-mode (``znorm=False``)
+        inversion — the uninverted tile is not a monotone transform of
+        raw distance, so allowing it would silently return wrong
+        neighbors.  Raw sharded work must route through the
+        series-parallel/local profile paths instead (they apply
+        ``TileEngine._raw_d2``)."""
+        if not self.spec.znorm:
+            raise ValueError(
+                f"{what} speaks Eq. (3) z-normalized distance only; "
+                "znorm=False (raw Euclidean) runs on the local or "
+                "series-parallel profile plans")
+
     def open_stream(self, s: Optional[int] = None, *,
                     history=None) -> "DiscordStream":
         """Open an append-only profile stream at window length ``s``
         (defaults to the spec's scalar ``s``), optionally seeded with
         ``history`` points."""
+        self._require_profile_plan("open_stream")
         if s is None:
             if self.spec.multi_window:
                 raise ValueError("multi-window spec: pass s= "
@@ -306,7 +679,7 @@ class DiscordEngine:
             s = self.spec.s
         return DiscordStream(self, int(s), history=history)
 
-    # -- non-plan methods (serial counted plane, hst_jax, ring, drag) --
+    # -- non-plan methods (serial counted plane, hst_jax, drag) --------
     def _dispatch(self, series, **kw) -> DiscordResult:
         spec = self.spec
         s, k = spec.s, spec.k
@@ -338,13 +711,16 @@ class DiscordEngine:
             from .hst_jax import hst_jax
             return hst_jax(series, s, k, P=spec.P, alpha=spec.alpha,
                            seed=spec.seed, backend=self.backend, **kw)
-        if m == "ring":
-            from .distributed import distributed_discords
-            return distributed_discords(series, s, k,
-                                        backend=self.backend, **kw)
         if m == "drag":
+            if "mesh" in kw:
+                raise TypeError(
+                    "mesh placement moved to the session: pass "
+                    "DiscordEngine(spec, mesh=...) (or "
+                    "SearchSpec(ndev=...)) instead of "
+                    "search(..., mesh=...)")
             from .distributed import drag_discords
             return drag_discords(series, s, k, r=spec.r, seed=spec.seed,
+                                 mesh=self._resolve_mesh(),
                                  backend=self.backend, **kw)
         raise AssertionError(f"unreachable method {m!r}")
 
@@ -359,11 +735,21 @@ class DiscordStream:
     in the append-only case an old window's nnd can only be superseded
     by a closer new neighbor, never worsen, so no old row is ever
     re-swept.
+
+    On a sharded engine the fill runs the ring plan and every append
+    runs the sharded tail plan: each device sweeps the tail queries
+    against only the candidate shard it owns, and the per-shard row
+    minima are min-folded globally — same exact results, mesh-wide
+    work split.
     """
 
     def __init__(self, engine: DiscordEngine, s: int, history=None):
         self.engine = engine
         self.s = int(s)
+        # the sharded fill/tail plans are Eq. (3)-only (no raw-mode
+        # inversion): raw streams on a sharded session fall back to
+        # the local plans, which handle znorm=False exactly
+        self._sharded = engine.sharded and engine.spec.znorm
         self._x = np.zeros(0, np.float64)
         self._d2 = np.zeros(0, np.float64)
         self._ngh = np.zeros(0, np.int64)
@@ -408,16 +794,23 @@ class DiscordStream:
         Lb = length_bucket(L)
         xp = np.zeros(Lb, np.float32)
         xp[:L] = self._x
+        ndev = eng.ndev if self._sharded else 1
         if n_old == 0:                # first fill: one full-profile plan
-            d2, arg = eng._profile_plan(s, Lb)(jnp.asarray(xp),
-                                               np.int32(n_new))
+            if self._sharded:
+                d2, arg, lanes, _ = eng._ring_exec(
+                    s, Lb, jnp.asarray(xp), np.int32(n_new))
+            else:
+                d2, arg = eng._profile_plan(s, Lb)(jnp.asarray(xp),
+                                                   np.int32(n_new))
+                lanes = eng._n_pad(s, Lb) ** 2
             self._d2 = np.asarray(d2, np.float64)[:n_new]
             self._ngh = np.asarray(arg, np.int64)[:n_new]
-            lanes = eng._n_pad(s, Lb) ** 2
         else:                         # tail sweep only
             n_tail = n_new - n_old
             Qb = length_bucket(n_tail, lo=32)
-            rd2, rngh, cd2, cngh = eng._tail_plan(s, Lb, Qb)(
+            plan = (eng._tail_sharded_plan(s, Lb, Qb) if self._sharded
+                    else eng._tail_plan(s, Lb, Qb))
+            rd2, rngh, cd2, cngh = plan(
                 jnp.asarray(xp), np.int32(n_old), np.int32(n_new))
             d2 = np.concatenate([self._d2,
                                  np.asarray(rd2, np.float64)[:n_tail]])
@@ -429,7 +822,10 @@ class DiscordStream:
             d2 = np.where(better, cm, d2)
             ngh = np.where(better, ca, ngh)
             self._d2, self._ngh = d2, ngh
-            lanes = Qb * eng._n_pad(s, Lb)
+            if self._sharded:
+                lanes = Qb * eng._shard_geom(s, Lb, ndev)[2]
+            else:
+                lanes = Qb * eng._n_pad(s, Lb)
         self.appends += 1
         self.tile_lanes += lanes
         eng.stats.appends += 1
@@ -451,6 +847,7 @@ class DiscordStream:
             positions=pos, nnds=vals, calls=self.tile_lanes,
             n=self.n_windows, s=self.s,
             method=f"stream[{self.engine.backend}]",
+            tile_lanes=self.tile_lanes,
             extra={"appends": self.appends,
                    "tile_lanes": self.tile_lanes,
                    "backend": self.engine.backend})

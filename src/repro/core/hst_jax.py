@@ -18,9 +18,12 @@ Everything is an upper-bound-preserving transformation, so exactness is
 inherited from the same argument as the serial algorithm: a discord is
 returned only when every other sequence's upper bound is below it.
 
-Work accounting: `pair_work` counts computed distance *lanes* (tile area
-actually swept), the blocked analogue of the paper's distance calls;
-`tiles` counts MXU tile launches.
+Work accounting (shared definition, docs/cps.md): `pair_work` counts
+computed distance *lanes* (tile area actually swept), the blocked
+analogue of the paper's distance calls — it is reported as both
+``calls`` and ``tile_lanes`` on the result, so ``cps = calls / (N k)``
+is directly comparable with the serial counted plane and the
+engine/ring planes.
 """
 from __future__ import annotations
 
@@ -358,5 +361,7 @@ def hst_jax(series, s: int, k: int = 1, *, P: int = 4, alpha: int = 4,
     return DiscordResult(positions=pos.tolist(), nnds=val.tolist(),
                          calls=int(work), n=n, s=s, method="hst_jax",
                          runtime_s=time.perf_counter() - t0,
+                         tile_lanes=int(work),
                          extra={"block": block, "batch": batch,
-                                "backend": backend})
+                                "backend": backend,
+                                "tile_lanes": int(work)})

@@ -57,7 +57,20 @@ def discords_via_matrix_profile(series, s: int, k: int = 1, *,
     prof = np.asarray(d, np.float64)
     n = prof.shape[0]
     pos, vals = topk_nonoverlapping(prof, k, s)
+    # swept tile lanes, counted as actually evaluated (docs/cps.md):
+    # the static-shape pallas path runs the mpblock upper-triangle
+    # kernel (tile (i, j) only for j >= i); every other backend sweeps
+    # the full block-aligned grid
+    nb = -(-n // block)
+    n_pad = nb * block
+    if backend == "pallas":
+        lanes = nb * (nb + 1) // 2 * block * block
+    else:
+        lanes = n_pad * n_pad
     return DiscordResult(positions=pos, nnds=vals,
-                         calls=n * n,           # SCAMP's O(N^2) work model
+                         calls=lanes,
                          n=n, s=s, method=f"scamp[{backend}]",
-                         runtime_s=time.perf_counter() - t0)
+                         runtime_s=time.perf_counter() - t0,
+                         tile_lanes=lanes,
+                         extra={"backend": backend,
+                                "tile_lanes": lanes})

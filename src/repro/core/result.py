@@ -1,4 +1,25 @@
-"""Common result container for every discord-search implementation."""
+"""Common result container for every discord-search implementation.
+
+Work accounting is unified across all four planes (see docs/cps.md for
+the full definition and per-plane mapping):
+
+``calls``
+    Number of Eq. (3) distance evaluations the plane actually
+    performed — scalar distance calls on the serial counted plane,
+    swept distance *lanes* (tile area) on the blocked planes
+    (``hst_jax``, the engine's profile/batched/stream plans, the
+    distributed ring).
+
+``tile_lanes``
+    The share of ``calls`` that went through the distance-tile engine
+    (``core/tiles``).  0 on the serial plane (it has no tile plane);
+    equal to ``calls`` on the fully-tiled planes.
+
+``cps``
+    The paper's cost-per-sequence indicator (Sec 4.2):
+    ``calls / (N * k)``.  One definition for every plane, so serial,
+    blocked, session and ring results are directly comparable.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -9,8 +30,9 @@ from typing import List
 class DiscordResult:
     """Outcome of a k-discord search.
 
-    ``calls`` is the number of distance-function invocations — the
-    paper's primary cost metric.  ``cps`` (Sec 4.2) = calls / (N * k).
+    ``calls`` is the number of distance evaluations — the paper's
+    primary cost metric; ``tile_lanes`` is the tiled share of it;
+    ``cps`` (Sec 4.2) = calls / (N * k).  See docs/cps.md.
     """
     positions: List[int]
     nnds: List[float]
@@ -19,6 +41,7 @@ class DiscordResult:
     s: int                      # sequence length
     method: str = "?"
     runtime_s: float = 0.0
+    tile_lanes: int = 0         # lanes swept through core/tiles
     extra: dict = field(default_factory=dict)
 
     @property

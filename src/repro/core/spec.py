@@ -84,8 +84,18 @@ class SearchSpec:
     seed    RNG seed for the randomized orders / sampling recipes
     r       DADD/DRAG abandon threshold (None = paper sampling recipe)
     block   candidate tile side of the engine's plan-cached profile
-            paths (``hst_jax`` keeps its own ``block=`` search kwarg;
-            ring/drag shard by device instead)
+            paths (``hst_jax`` keeps its own ``block=`` search kwarg);
+            also the MXU-alignment unit of the ring plane's per-device
+            shards
+    ndev    mesh placement for the sharded plans (``ring``/``drag``
+            and the sharded batched/stream paths): number of local
+            devices for the auto data-mesh
+            (:func:`repro.parallel.sharding.series_mesh`); None means
+            *all* local devices when a sharded plan runs.  An explicit
+            ``jax.sharding.Mesh`` is passed to ``DiscordEngine(...,
+            mesh=...)`` instead — a Mesh is a device-topology object,
+            not part of the hashable search description (the engine
+            keys its plan cache on the mesh *shape*).
     """
     s: Union[int, Tuple[int, ...]]
     k: int = 1
@@ -97,6 +107,7 @@ class SearchSpec:
     seed: int = 0
     r: Optional[float] = None
     block: int = 256
+    ndev: Optional[int] = None
 
     def __post_init__(self):
         # normalize: list/tuple s -> tuple of ints, scalar -> int
@@ -118,6 +129,17 @@ class SearchSpec:
         object.__setattr__(self, "znorm", bool(self.znorm))
         if self.r is not None:
             object.__setattr__(self, "r", float(self.r))
+        if self.ndev is not None:
+            object.__setattr__(self, "ndev", int(self.ndev))
+            if self.ndev < 1:
+                raise ValueError(f"ndev must be >= 1, got {self.ndev}")
+            if canonical_method(self.method) not in (
+                    "ring", "drag", "matrix_profile"):
+                raise ValueError(
+                    "ndev applies to the mesh-sharded plan family "
+                    "(ring | drag, and matrix_profile's batched/"
+                    f"stream layouts); method={self.method!r} is "
+                    "single-device")
         for name in ("k", "P", "alpha", "block"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "

@@ -2,11 +2,19 @@
 
 Builds a typed ``SearchSpec`` from argv and runs it through one
 ``DiscordEngine`` session — the same code path as the library API, for
-every method (``ring``/``distributed`` are the same engine; both
-spellings are accepted).
+every method.  Every accepted spelling funnels through
+``repro.core.spec`` canonicalization, so the CLI surface cannot drift
+from the library: ``--method distributed`` *is* ``ring`` (the
+mesh-sharded plan family), ``--method scamp``/``mp`` are
+``matrix_profile``, and ``--backend jnp``/``ref``/``np`` resolve to
+their canonical tile backends (``xla``/``numpy``).
+
+Backend auto-resolution when ``--backend`` is omitted follows the
+registry order: ``REPRO_TILE_BACKEND`` env var if set, else ``pallas``
+on TPU and ``xla`` everywhere else (resolved once per session).
 
     python -m repro.launch.discord --method hst --n 20000 --s 120 -k 3
-    python -m repro.launch.discord --method ring --backend xla ...
+    python -m repro.launch.discord --method ring --ndev 4 --backend xla
     python -m repro.launch.discord --method matrix_profile --s 96,128
 """
 from __future__ import annotations
@@ -19,9 +27,17 @@ from repro.core import DiscordEngine, SearchSpec
 from repro.core.spec import (JAX_METHODS, METHOD_ALIASES,
                              SERIAL_METHODS)
 from repro.data import sine_noise, with_implanted_anomalies
+from repro.kernels.registry import ENV_VAR as BACKEND_ENV_VAR
+from repro.kernels.registry import _ALIASES as _BACKEND_ALIASES
+from repro.kernels.registry import available_backends
 
 METHOD_CHOICES = sorted(set(SERIAL_METHODS) | set(JAX_METHODS)
                         | set(METHOD_ALIASES))
+#: canonical tile backends plus the registry's accepted alias
+#: spellings — derived, so a new backend/alias is advertised here
+#: automatically
+BACKEND_CHOICES = tuple(sorted(set(available_backends())
+                               | set(_BACKEND_ALIASES)))
 
 
 def _parse_s(text: str):
@@ -30,11 +46,17 @@ def _parse_s(text: str):
     return parts[0] if len(parts) == 1 else tuple(parts)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    alias_help = ", ".join(f"{a} == {c}"
+                           for a, c in sorted(METHOD_ALIASES.items()))
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.discord",
+        description="k-discord search through one DiscordEngine "
+                    "session (library-identical code path).")
     ap.add_argument("--method", default="hst", choices=METHOD_CHOICES,
-                    help="canonical names plus accepted aliases "
-                         "(distributed == ring)")
+                    help=f"serial counted: {', '.join(SERIAL_METHODS)}; "
+                         f"blocked jax: {', '.join(JAX_METHODS)}; "
+                         f"aliases: {alias_help}")
     ap.add_argument("--file", help="1-column text file of points")
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--E", type=float, default=0.5)
@@ -49,13 +71,33 @@ def main(argv=None):
     ap.add_argument("--r", type=float, default=None,
                     help="DADD/DRAG abandon threshold (default: paper "
                          "sampling recipe)")
-    ap.add_argument("--backend", default=None,
-                    choices=["numpy", "xla", "pallas"],
-                    help="distance-tile backend for the jax methods")
+    ap.add_argument("--backend", default=None, choices=BACKEND_CHOICES,
+                    help="distance-tile backend for the jax methods "
+                         "(canonical: numpy | xla | pallas; aliases "
+                         "jnp == xla, ref/np == numpy).  Omitted: "
+                         f"${BACKEND_ENV_VAR} if set, else pallas on "
+                         "TPU and xla elsewhere")
+    ap.add_argument("--ndev", type=int, default=None,
+                    help="device count of the auto data-mesh for the "
+                         "sharded methods (ring/drag and batched/"
+                         "stream layouts); default: all local devices")
     ap.add_argument("--raw", action="store_true",
                     help="raw Euclidean windows instead of Eq. (3) "
-                         "z-normalized (DADD's convention)")
-    args = ap.parse_args(argv)
+                         "z-normalized (DADD's convention; only "
+                         "brute | hst | matrix_profile)")
+    return ap
+
+
+def spec_from_args(args: argparse.Namespace) -> SearchSpec:
+    """argv -> canonicalized SearchSpec (aliases resolve here)."""
+    return SearchSpec(s=args.s, k=args.k, method=args.method,
+                      P=args.P, alpha=args.alpha, seed=args.seed,
+                      r=args.r, znorm=not args.raw,
+                      backend=args.backend, ndev=args.ndev)
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     anchor = args.s if isinstance(args.s, int) else max(args.s)
     if args.file:
@@ -67,12 +109,10 @@ def main(argv=None):
             amp=0.8, seed=args.seed)
         print(f"synthetic Eq.7 series, implanted at {pos}")
 
-    spec = SearchSpec(s=args.s, k=args.k, method=args.method,
-                      P=args.P, alpha=args.alpha, seed=args.seed,
-                      r=args.r, znorm=not args.raw,
-                      backend=args.backend)
+    spec = spec_from_args(args)
     engine = DiscordEngine(spec)
-    print(f"{spec} -> backend={engine.backend}")
+    mesh = f", ndev={engine.ndev}" if engine.sharded else ""
+    print(f"{spec} -> backend={engine.backend}{mesh}")
     res = engine.search(x)
     for r in res if isinstance(res, list) else [res]:
         print(r)

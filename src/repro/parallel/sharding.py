@@ -14,15 +14,60 @@ from any dimension it does not divide (e.g. granite's single KV head,
 hymba's 32001 vocab before padding) — the dry-run must never fail on a
 divisibility technicality, and the fallback is always the safe one
 (replication on that dim).
+
+This module also owns the *series* mesh used by the discord planes: a
+1-D data mesh named :data:`SERIES_AXIS` over (a prefix of) the local
+devices, built by :func:`series_mesh`.  The ``DiscordEngine`` ring
+plans and ``core/distributed`` shard window blocks over this axis; it
+is deliberately separate from the LM training meshes above (the
+discord sweep never mixes with the model/data axes).
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+
+#: the one mesh axis of the discord ring/sharded-batch plane
+SERIES_AXIS = "shard"
+
+
+def series_mesh(ndev: Optional[int] = None) -> Mesh:
+    """1-D discord data mesh over all (or the first ``ndev``) local
+    devices, axis name :data:`SERIES_AXIS`.
+
+    This is the auto-mesh every ring-capable ``DiscordEngine`` falls
+    back to when no explicit mesh is passed; ``SearchSpec(ndev=...)``
+    bounds the device count (useful for scaling sweeps on a forced
+    multi-device host platform).
+    """
+    devs = jax.devices()
+    if ndev is not None:
+        ndev = int(ndev)
+        if not 1 <= ndev <= len(devs):
+            raise ValueError(
+                f"ndev={ndev} out of range: {len(devs)} local "
+                f"device(s) available")
+        devs = devs[:ndev]
+    return Mesh(np.array(devs), (SERIES_AXIS,))
+
+
+def as_series_mesh(mesh: Mesh) -> Mesh:
+    """Normalize any 1-D mesh onto the :data:`SERIES_AXIS` name (the
+    discord shard bodies hard-code their axis); rejects >1-D meshes —
+    the ring plane is series-parallel only."""
+    devs = np.asarray(mesh.devices)
+    if devs.ndim != 1:
+        raise ValueError(
+            f"discord searches shard over one axis; got a "
+            f"{devs.ndim}-D mesh of shape {devs.shape}")
+    if mesh.axis_names == (SERIES_AXIS,):
+        return mesh
+    return Mesh(devs, (SERIES_AXIS,))
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -62,6 +62,8 @@ def test_spec_canonicalization_and_aliases():
     dict(s=(32, 32), method="matrix_profile"),     # duplicate lengths
     dict(s=32, method="hst_jax", znorm=False),     # Eq.(3)-only method
     dict(s=32, method="dadd", znorm=False),
+    dict(s=32, method="hst", ndev=2),      # ndev is sharded-plane only
+    dict(s=32, method="ring", ndev=0),
 ])
 def test_spec_validation_rejects(bad):
     with pytest.raises(ValueError):
@@ -288,6 +290,19 @@ def test_profile_search_rejects_stray_kwargs():
                                    backend="xla"))
     with pytest.raises(TypeError):
         eng.search(_series(30, 300), interpret=True)
+
+
+def test_batched_and_stream_reject_non_profile_methods():
+    """search_batched/open_stream run the exact-profile plan family;
+    any other method must raise instead of silently ignoring its
+    semantics (e.g. drag's threshold, hst's counted plane)."""
+    for method in ("hst", "hst_jax", "drag"):
+        eng = DiscordEngine(SearchSpec(s=32, method=method,
+                                       backend="xla"))
+        with pytest.raises(ValueError, match="profile plan"):
+            eng.search_batched(np.zeros((2, 300)))
+        with pytest.raises(ValueError, match="profile plan"):
+            eng.open_stream()
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,122 @@
+"""CLI <-> spec drift audit: every user-facing launcher string round-
+trips through ``repro.core.spec`` canonicalization.
+
+The launcher's job is to build a SearchSpec from argv; these tests pin
+the contract that its choices/help cannot drift from the library:
+every advertised method spelling (canonical or alias) parses into a
+valid canonical spec, every advertised backend spelling resolves to a
+registered backend, and the flag set maps 1:1 onto spec fields.
+"""
+import numpy as np
+import pytest
+
+from repro.core.spec import (JAX_METHODS, METHOD_ALIASES, SERIAL_METHODS,
+                             SearchSpec, canonical_method)
+from repro.kernels.registry import _ALIASES as BACKEND_ALIASES
+from repro.kernels.registry import available_backends
+from repro.launch.discord import (BACKEND_CHOICES, METHOD_CHOICES,
+                                  build_parser, spec_from_args)
+
+
+def _spec(argv):
+    return spec_from_args(build_parser().parse_args(argv))
+
+
+# ----------------------------------------------------------------------
+# method spellings
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("method", METHOD_CHOICES)
+def test_every_advertised_method_builds_a_canonical_spec(method):
+    argv = ["--method", method]
+    if method in ("scamp", "mp", "matrix_profile"):
+        pass                                   # scalar s fine
+    spec = _spec(argv)
+    assert spec.method == canonical_method(method)
+    assert spec.method in SERIAL_METHODS + JAX_METHODS
+
+
+def test_method_choices_cover_exactly_the_spec_surface():
+    assert set(METHOD_CHOICES) == (set(SERIAL_METHODS) | set(JAX_METHODS)
+                                   | set(METHOD_ALIASES))
+
+
+def test_ring_and_distributed_are_one_engine():
+    assert _spec(["--method", "ring"]) == _spec(["--method",
+                                                 "distributed"])
+
+
+# ----------------------------------------------------------------------
+# backend spellings
+# ----------------------------------------------------------------------
+def test_backend_choices_cover_registry_and_aliases():
+    """The CLI must advertise exactly the canonical backends plus the
+    registry's alias spellings — no more (dead flags), no less
+    (library spellings the CLI rejects)."""
+    assert set(BACKEND_CHOICES) == (set(available_backends())
+                                    | set(BACKEND_ALIASES))
+
+
+@pytest.mark.parametrize("alias,canonical",
+                         sorted(BACKEND_ALIASES.items()))
+def test_backend_aliases_canonicalize(alias, canonical):
+    assert _spec(["--backend", alias]).backend == canonical
+
+
+# ----------------------------------------------------------------------
+# flag -> spec field round-trip
+# ----------------------------------------------------------------------
+def test_argv_round_trip_full_spec():
+    spec = _spec(["--method", "drag", "--s", "64", "-k", "3",
+                  "--P", "5", "--alpha", "6", "--seed", "11",
+                  "--r", "2.5", "--backend", "jnp", "--ndev", "1"])
+    assert spec == SearchSpec(s=64, k=3, method="drag", P=5, alpha=6,
+                              seed=11, r=2.5, backend="xla", ndev=1)
+
+
+def test_multi_window_s_parses_to_tuple():
+    spec = _spec(["--method", "mp", "--s", "96,128"])
+    assert spec.s == (96, 128) and spec.multi_window
+    assert _spec(["--method", "mp", "--s", "96"]).s == 96
+
+
+def test_raw_flag_maps_to_znorm():
+    assert _spec(["--method", "hst", "--raw"]).znorm is False
+    assert _spec(["--method", "hst"]).znorm is True
+
+
+def test_ndev_rejected_for_single_device_methods():
+    """--ndev only means something to the sharded plan family; a
+    serial method must fail loudly at spec build, not resolve (and
+    possibly fail on) a device mesh it would never use."""
+    with pytest.raises(ValueError, match="single-device"):
+        _spec(["--method", "hst", "--ndev", "4"])
+    assert _spec(["--method", "ring", "--ndev", "1"]).ndev == 1
+
+
+def test_help_documents_every_alias_and_the_env_var():
+    text = build_parser().format_help()
+    for alias, canonical in METHOD_ALIASES.items():
+        assert alias in text and canonical in text
+    assert "REPRO_TILE_BACKEND" in text       # auto-resolution rule
+    assert "pallas on TPU" in text
+
+
+# ----------------------------------------------------------------------
+# end-to-end smoke (tiny series, serial method: no jit in the loop)
+# ----------------------------------------------------------------------
+def test_launcher_main_smoke(capsys):
+    from repro.launch.discord import main
+    main(["--method", "brute", "--n", "600", "--s", "48", "-k", "1"])
+    out = capsys.readouterr().out
+    assert "SearchSpec" in out and "DiscordResult" in out
+    assert "brute" in out
+
+
+def test_launcher_reads_file(tmp_path, capsys):
+    rng = np.random.default_rng(0)
+    f = tmp_path / "series.txt"
+    np.savetxt(f, np.sin(0.1 * np.arange(500))
+               + 0.1 * rng.normal(size=500))
+    from repro.launch.discord import main
+    main(["--method", "brute", "--file", str(f), "--s", "40"])
+    assert "DiscordResult" in capsys.readouterr().out
