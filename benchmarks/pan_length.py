@@ -1,0 +1,126 @@
+"""Pan-length ladder benchmark: one shared sweep vs independent ones.
+
+Measures what the pan-length plan family buys over L independent
+per-length searches and emits ``BENCH_pan.json``:
+
+  * width-normalized ``tile_lanes`` of one ladder sweep vs the sum of
+    the independent per-length sweeps (``lane_ratio`` — the
+    acceptance bar is < 0.6 for an 8-rung ladder);
+  * cold vs warm ``search_pan`` wall clock (compile-once: the warm
+    call reuses the one compiled ladder plan, zero new traces);
+  * the independent sweeps' wall clock through the same engine cache
+    (their best case) for an honest runtime comparison.
+
+On CPU the wall-clock numbers are modest; the *lane ratio* and the
+trace counts are the contract (docs/cps.md).
+
+Usage:  PYTHONPATH=src python -m benchmarks.pan_length [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import DiscordEngine, SearchSpec
+from repro.data import sine_noise, with_implanted_anomalies
+
+from .util import BenchTable
+
+N, K = 8192, 3
+LADDER = tuple(range(64, 121, 8))          # 8 rungs: 64..120
+REPS = 3
+
+
+def _t(fn):
+    fn()                                   # warm once
+    times = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(out_path: str = "BENCH_pan.json") -> dict:
+    x = sine_noise(N, E=0.3, seed=0)
+    x, _pos = with_implanted_anomalies(x, n_anomalies=2,
+                                       length=max(LADDER), amp=0.8,
+                                       seed=0)
+
+    # -- pan: one ladder sweep -----------------------------------------
+    eng = DiscordEngine(SearchSpec(s=LADDER, k=K,
+                                   method="matrix_profile"))
+    t0 = time.perf_counter()
+    pan = eng.search_pan(x)
+    pan_cold_s = time.perf_counter() - t0
+    pan_warm_s = _t(lambda: eng.search_pan(x))
+    assert eng.stats.traces == 1, eng.stats    # compile-once, mesh of 1
+
+    # -- independent per-length sweeps (one engine each, warm) ---------
+    indep_lanes = 0
+    engines = [DiscordEngine(SearchSpec(s=s, k=K,
+                                        method="matrix_profile"))
+               for s in LADDER]
+
+    def indep_all():
+        for e in engines:
+            e.search(x)
+
+    indep_cold_t0 = time.perf_counter()
+    indep_all()
+    indep_cold_s = time.perf_counter() - indep_cold_t0
+    indep_warm_s = _t(indep_all)
+    indep_results = []
+    for e in engines:
+        e.stats.tile_lanes = 0
+        indep_results.append(e.search(x))
+        indep_lanes += e.stats.tile_lanes
+
+    parity = all(p.positions == r.positions
+                 for p, r in zip(pan.per_rung, indep_results))
+
+    result = {
+        "shape": {"n": N, "k": K, "ladder": list(LADDER),
+                  "rungs": len(LADDER)},
+        "backend": eng.backend,
+        "pan_tile_lanes": int(pan.tile_lanes),
+        "independent_tile_lanes": int(indep_lanes),
+        "lane_ratio": pan.tile_lanes / max(indep_lanes, 1),
+        "pan_cold_s": pan_cold_s,
+        "pan_warm_s": pan_warm_s,
+        "independent_cold_s": indep_cold_s,
+        "independent_warm_s": indep_warm_s,
+        "warm_speedup_x": indep_warm_s / max(pan_warm_s, 1e-9),
+        "traces": eng.stats.traces,
+        "plans": eng.stats.plans,
+        "lb_ok": bool(pan.extra["lb_ok"]),
+        "lb_margin": pan.lb_margin,
+        "parity_with_independent": bool(parity),
+        "global_topk": pan.global_topk,
+    }
+
+    tab = BenchTable("pan-length ladder (n=%d, %d rungs %d..%d)"
+                     % (N, len(LADDER), LADDER[0], LADDER[-1]),
+                     ["metric", "value"])
+    for key in ("pan_tile_lanes", "independent_tile_lanes",
+                "lane_ratio", "pan_cold_s", "pan_warm_s",
+                "independent_warm_s", "warm_speedup_x", "traces",
+                "lb_ok", "parity_with_independent"):
+        v = result[key]
+        tab.row(key, f"{v:.4f}" if isinstance(v, float) else v)
+    print(tab)
+    assert result["lane_ratio"] < 0.6, result["lane_ratio"]
+    assert parity, "pan results diverged from independent sweeps"
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"\nwrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_pan.json")
+    run(ap.parse_args().out)

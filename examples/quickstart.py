@@ -42,11 +42,21 @@ print(f"\nsession engine: first search {cold:.3f}s (traces+compiles), "
       f"same-bucket search {warm:.3f}s "
       f"({eng.stats.traces} trace(s) total)")
 
-# --- multi-window search (one spec, one result per length) -------------
-for r in DiscordEngine(SearchSpec(s=(64, 96, 128), k=1,
-                                  method="matrix_profile")).search(x):
+# --- pan-length search: a whole window ladder from ONE sweep -----------
+# The discord length is unknown in practice, so sweep a ladder of
+# lengths.  search_pan carries the QT inner products across rungs
+# (VALMOD-style): the base rung pays full-width dot tiles, every later
+# rung only its extension width — far below L independent sweeps.
+pan = DiscordEngine(SearchSpec(s=tuple(range(64, 129, 16)), k=1,
+                               method="matrix_profile")).search_pan(x)
+for r in pan.per_rung:
     print(f"  s={r.s:4d} -> discord at {r.positions[0]} "
           f"(nnd {r.nnds[0]:.3f})")
+print(f"pan ladder swept {pan.tile_lanes} lanes; independent sweeps "
+      f"would cost {pan.extra['independent_lanes']} "
+      f"({pan.tile_lanes / pan.extra['independent_lanes']:.2f}x); "
+      f"best across lengths (d/sqrt(s)): s={pan.global_topk[0]['s']} "
+      f"at {pan.global_topk[0]['position']}")
 
 # --- streaming: append-only profile maintenance ------------------------
 # Old windows warm-start from their previous nnd (appends can only

@@ -15,9 +15,9 @@ Layers:
 """
 from .api import find_discords, find_discords_batched
 from .engine import DiscordEngine, DiscordStream, EngineStats
-from .result import DiscordResult
+from .result import DiscordResult, PanResult
 from .spec import SearchSpec
 
 __all__ = ["SearchSpec", "DiscordEngine", "DiscordStream",
-           "EngineStats", "DiscordResult", "find_discords",
-           "find_discords_batched"]
+           "EngineStats", "DiscordResult", "PanResult",
+           "find_discords", "find_discords_batched"]

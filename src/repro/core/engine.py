@@ -44,6 +44,14 @@ Mesh-sharded plan family (the ring fold-in, docs/ARCHITECTURE.md):
     only its own candidate shard against the new tail windows and the
     per-shard minima are min-folded globally.
 
+Pan-length plan family (``core/pan.py``, docs/ARCHITECTURE.md §3b):
+    ``search_pan`` runs a whole *ladder* of window lengths from one
+    QT-carrying tile sweep — the base rung pays full-width dot tiles,
+    each later rung only its extension width — plan-cached per
+    ``(canonical ladder, length-bucket)`` (``("pan", ...)`` locally,
+    ``("pan_ring", ...)`` with the query blocks sharded across the
+    mesh).  Multi-window specs route ``search`` through it.
+
 Every compiled plan body bumps ``stats.traces`` when (and only when)
 it is traced, so tests can assert the compile-once contract directly.
 
@@ -66,7 +74,9 @@ from jax import lax
 
 from ..kernels.common import ceil_div
 from ..kernels.registry import resolve_backend
-from .result import DiscordResult
+from .pan import (PanEngine, canonical_ladder, cross_length_lb,
+                  global_normalized_topk, pan_lanes)
+from .result import DiscordResult, PanResult
 from .spec import SearchSpec, length_bucket
 from .tiles import TileEngine, topk_nonoverlapping
 
@@ -275,6 +285,29 @@ class DiscordEngine:
             return fn
         return self._get_plan(("tail", s, Lb, Qb), build)
 
+    def _pan_plan(self, ladder: tuple, Lb: int):
+        """(series_pad (Lb,), n_valid0) -> (d2 (R, n_pad), ngh).
+
+        The pan-length ladder sweep (``core/pan.py``): every rung's
+        exact profile from one QT-carrying pass — the base rung pays
+        full-width dot tiles, each later rung only its extension
+        width.  ``n_valid0`` is the true window count at the *base*
+        rung; the plan derives every other rung's count from it, so
+        one compiled sweep serves the whole bucket (keyed on the
+        canonical ladder — the *ladder bucket* — and ``Lb``).
+        """
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, n_valid0):
+                self.stats.traces += 1
+                peng = PanEngine(series_pad, ladder, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid0)
+                return peng.profile()
+            return fn
+        return self._get_plan(("pan", ladder, Lb), build)
+
     # -- mesh-sharded plan family (the ring fold-in) -------------------
     def _shard_geom(self, s: int, Lb: int, ndev: int):
         """Window-count geometry of a sharded bucket-``Lb`` sweep:
@@ -418,6 +451,58 @@ class DiscordEngine:
             return fn
         return self._get_plan(("tail_ring", s, Lb, Qb, (ndev,)), build)
 
+    def _pan_row_geom(self, ladder: tuple, Lb: int, ndev: int):
+        """Query-row geometry of a pan sweep: ``(n_pad, nb_p)`` where
+        ``n_pad`` is the base-rung padded window count and ``nb_p``
+        the query block count padded to a device multiple (1 device =
+        no padding)."""
+        n_pad = self._n_pad(ladder[0], Lb)
+        nb = n_pad // self.spec.block
+        return n_pad, ceil_div(nb, ndev) * ndev
+
+    def _pan_sharded_plan(self, ladder: tuple, Lb: int):
+        """Mesh-sharded pan sweep: the query *blocks* are sharded
+        across the device mesh (candidates replicated — the pan
+        sweep's row decomposition is embarrassingly parallel), each
+        device runs the same QT-carrying ladder body over its own
+        starts, and the host reassembles the (R, n_pad) profiles.
+        Unlike the ring plans this path needs no raw-mode guard: the
+        pan body computes raw distances natively from the carried QT.
+        """
+        spec, be = self.spec, self.backend
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+        n_pad, nb_p = self._pan_row_geom(ladder, Lb, ndev)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS
+
+            def shard_body(starts, series_pad, n_valid0):
+                peng = PanEngine(series_pad, ladder, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid0[0])
+                return peng.rows(starts)
+
+            sweep = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(AXIS), P(None), P(None)),
+                out_specs=(P(AXIS, None, None), P(AXIS, None, None)),
+                check_rep=False)
+
+            def fn(series_pad, n_valid0):
+                self.stats.traces += 1
+                starts = (jnp.arange(nb_p, dtype=jnp.int32)
+                          * spec.block)
+                d2, arg = sweep(starts, series_pad,
+                                jnp.full((1,), n_valid0, jnp.int32))
+                R = len(ladder)
+                return (d2.transpose(1, 0, 2).reshape(R, -1)[:, :n_pad],
+                        arg.transpose(1, 0, 2).reshape(R, -1)[:, :n_pad])
+            return fn
+        return self._get_plan(("pan_ring", ladder, Lb, (ndev,)), build)
+
     # -- searches ------------------------------------------------------
     def search(self, series, **kw
                ) -> Union[DiscordResult, List[DiscordResult]]:
@@ -433,8 +518,11 @@ class DiscordEngine:
             if kw:
                 raise TypeError("multi-window search takes no extra "
                                 f"kwargs, got {sorted(kw)}")
-            return [self._search_profile(series, s)
-                    for s in spec.windows]
+            # all lengths share one pan-length ladder sweep; results
+            # come back in the spec's own window order
+            pan = self.search_pan(series)
+            by_s = {r.s: r for r in pan.per_rung}
+            return [by_s[s] for s in spec.windows]
         if spec.method == "matrix_profile":
             if kw:
                 raise TypeError("matrix_profile search is fully "
@@ -524,6 +612,129 @@ class DiscordEngine:
             runtime_s=time.perf_counter() - t0, tile_lanes=lanes,
             extra={"backend": self.backend, "bucket": Lb, "ndev": ndev,
                    "tile_lanes": lanes, "znorm": self.spec.znorm})
+
+    # -- pan-length (window-ladder) searches ---------------------------
+    def search_pan(self, series, *, ladder=None) -> PanResult:
+        """Exact discords at every rung of a window-length ladder from
+        **one** shared tile sweep, plus the global length-normalized
+        (``d / sqrt(s)``) top-k across rungs.
+
+        ``ladder`` defaults to the spec's window tuple; any iterable
+        of lengths is accepted and canonicalized (sorted, deduped) —
+        the canonical ladder is the plan-cache key, so a second search
+        over the same ladder and length bucket adds zero new traces.
+        Runs on local sessions and (query-block-sharded) on meshed
+        ones, in both znorm modes, on every tile backend.
+
+        Each ``per_rung`` entry matches an independent single-length
+        ``matrix_profile`` search at that rung (same positions, same
+        nnds up to summation order); the incremental QT carry is
+        cross-checked at runtime against the cross-length lower bound
+        (``lb_margin`` / ``extra["lb_ok"]``, see ``pan.cross_length_lb``).
+        """
+        t0 = time.perf_counter()
+        spec = self.spec
+        if spec.method not in ("matrix_profile", "ring"):
+            raise ValueError(
+                "search_pan runs the exact-profile plan family and "
+                "needs method='matrix_profile' (local) or 'ring' "
+                f"(mesh-sharded); got method={spec.method!r}")
+        lad = canonical_ladder(spec.windows if ladder is None
+                               else ladder)
+        x = np.asarray(series, np.float64).ravel()
+        L = x.shape[0]
+        if L < lad[-1] + 1:
+            raise ValueError(f"series of {L} points is too short for "
+                             f"the ladder's longest window {lad[-1]}")
+        s0 = lad[0]
+        n0 = L - s0 + 1
+        Lb = length_bucket(L)
+        xp = np.zeros(Lb, np.float32)
+        xp[:L] = x
+        ndev = self.ndev if self.sharded else 1
+        if self.sharded:
+            plan = self._pan_sharded_plan(lad, Lb)
+            n_pad, nb_p = self._pan_row_geom(lad, Lb, ndev)
+            n_rows = nb_p * spec.block
+        else:
+            plan = self._pan_plan(lad, Lb)
+            n_rows = n_pad = self._n_pad(s0, Lb)
+        # neighbor ids stay on device: PanResult carries no neighbor
+        # info, so only the d2 profiles cross to the host
+        d2s, _args = plan(jnp.asarray(xp), np.int32(n0))
+        d2s = np.asarray(d2s, np.float64)
+        lanes = pan_lanes(lad, n_rows, n_pad)
+        cells = n_rows * n_pad
+
+        from .windows import sliding_stats
+        per_rung, profiles = [], []
+        prev_d2 = prev_sig = None
+        lb_margin = np.inf
+        elapsed = None                  # filled once, shared per rung
+        # the sigma-ratio LB is the only consumer of host sigmas:
+        # skip the O(L) passes in raw mode (monotonicity bound) and
+        # for single-rung ladders (no transition to check)
+        need_sig = spec.znorm and len(lad) > 1
+        for r, s_r in enumerate(lad):
+            n_r = L - s_r + 1
+            d2_r = d2s[r, :n_r]
+            prof = np.sqrt(np.maximum(d2_r, 0.0))
+            pos, vals = topk_nonoverlapping(
+                np.where(np.isfinite(prof), prof, -np.inf),
+                spec.k, s_r)
+            rcalls = (cells if r == 0 else
+                      ceil_div(cells * (s_r - lad[r - 1]), s_r))
+            sig_r = sliding_stats(x, s_r)[1] if need_sig else None
+            if r:
+                # znorm: sigma-ratio lemma; raw: extension terms are
+                # squares, so d2 is monotone nondecreasing in s
+                lb = (cross_length_lb(prev_d2, prev_sig, sig_r)
+                      if spec.znorm else prev_d2[:n_r])
+                # inf-profile windows (no valid non-self match at a
+                # rung) would yield inf - inf = NaN and poison the
+                # min: check finite cells only
+                fin = np.isfinite(d2_r) & np.isfinite(lb)
+                if fin.any():
+                    lb_margin = min(lb_margin, float(np.min(
+                        (d2_r[fin] - lb[fin]) / s_r)))
+            prev_d2, prev_sig = d2_r, sig_r
+            per_rung.append(DiscordResult(
+                positions=pos, nnds=vals, calls=rcalls, n=n_r, s=s_r,
+                method=f"pan[{self.backend}]"
+                       if ndev == 1 else
+                       f"pan[{ndev}dev|{self.backend}]",
+                tile_lanes=rcalls,
+                extra={"backend": self.backend, "bucket": Lb,
+                       "ladder": lad, "rung": r,
+                       "pan_tile_lanes": lanes,
+                       "znorm": spec.znorm}))
+            profiles.append(prof)
+        if len(lad) == 1:
+            lb_margin = 0.0
+        global_topk = global_normalized_topk(profiles, lad, spec.k)
+        self.stats.searches += 1
+        self.stats.tile_lanes += lanes
+        elapsed = time.perf_counter() - t0
+        lb_ok = bool(lb_margin >= -3e-3)
+        for rr in per_rung:             # honest per-ladder wall clock
+            rr.runtime_s = elapsed
+            rr.extra["per_rung_s"] = elapsed / len(lad)
+            rr.extra["lb_ok"] = lb_ok
+        return PanResult(
+            per_rung=per_rung, global_topk=global_topk, ladder=lad,
+            n=n0, calls=lanes, tile_lanes=lanes, runtime_s=elapsed,
+            method=(f"pan[{self.backend}]" if ndev == 1 else
+                    f"pan[{ndev}dev|{self.backend}]"),
+            lb_margin=float(lb_margin),
+            extra={"backend": self.backend, "bucket": Lb,
+                   "ndev": ndev, "znorm": spec.znorm,
+                   "independent_lanes": self._independent_lanes(lad, Lb),
+                   "lb_ok": lb_ok})
+
+    def _independent_lanes(self, ladder: tuple, Lb: int) -> int:
+        """What ``len(ladder)`` independent per-length profile sweeps
+        of the same bucket would cost — the pan sweep's baseline."""
+        return sum(self._n_pad(s, Lb) ** 2 for s in ladder)
 
     def search_batched(self, series_batch) -> List[DiscordResult]:
         """Top-k discords of every series in a (B, L) stack — one

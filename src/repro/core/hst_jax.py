@@ -117,9 +117,12 @@ def _cluster_sizes(words):
 
 
 def _smooth(nnd, s: int):
-    """Eq. (6) centered moving average (s+1 window), raw at borders."""
-    half = s // 2
-    width = 2 * half + 1
+    """Eq. (6) centered moving average, raw at borders — width from
+    ``windows.smoothing_width`` (smallest odd width >= s + 1), in
+    lockstep with the serial ``moving_average_centered``."""
+    from .windows import smoothing_width
+    width = smoothing_width(s)
+    half = width // 2
     n = nnd.shape[0]
     csum = jnp.concatenate([jnp.zeros(1, nnd.dtype), jnp.cumsum(nnd)])
     core = (csum[width:] - csum[:-width]) / width      # (n-width+1,)
@@ -350,7 +353,14 @@ def hst_jax(series, s: int, k: int = 1, *, P: int = 4, alpha: int = 4,
                                   alpha))
     n_seq = series.shape[0] - s + 1
     batch = max(1, min(batch, n_seq))
-    block = min(block, max(128, n_seq))
+    # tiny-series geometry guard: never let the candidate tile side
+    # exceed the (8-sublane-aligned) window count — the old
+    # max(128, n_seq) floor swept a up-to-16x padded grid for
+    # n_seq < 128.  Results were already exact either way (padding ids
+    # mask to +inf in every backend; tests pin it), this keeps the
+    # swept lanes and work counts honest.
+    from ..kernels.common import ceil_div
+    block = min(block, max(8, ceil_div(n_seq, 8) * 8))
     key = jax.random.PRNGKey(seed)
     pos, val, work = _hst_jax_impl(
         series, words, key, s=s, k=k, P=P, alpha=alpha, block=block,

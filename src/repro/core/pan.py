@@ -1,0 +1,266 @@
+"""Pan-length discord search: one shared sweep for a ladder of windows.
+
+The discord *length* is the one search parameter the paper cannot tell
+you (cost depends on it non-trivially, Sec 4), so practitioners sweep a
+range of ``s`` values.  Run naively that costs a full Eq. (3) tile
+sweep per length.  VALMOD (Linardi et al., "Matrix Profile Goes MAD")
+observed that almost all of that work is shared: the scalar products
+``QT(i, j) = <x[i:i+s], x[j:j+s]>`` at length ``s + d`` differ from the
+length-``s`` ones only by ``d`` extra multiply-adds per pair.  This
+module is that observation as a plan family:
+
+``PanEngine``
+    jit-safe sweep over a *ladder* ``(s_0 < s_1 < ... < s_{R-1})``:
+
+      * **one cumulative-sum pass** over the series yields the per-rung
+        ``mu``/``sigma`` (and raw window norms) for every ladder rung —
+        the same ``csum[s+i] - csum[i]`` arithmetic as
+        ``kernels.common.sliding_stats_jnp``, so in-range stats are
+        bit-identical to the single-length engine's;
+      * per query block, the **base rung** pays one full-width dot tile
+        (``dot_tile`` backend primitive, ``kernels.registry``) and each
+        later rung only the ``(s_r - s_{r-1})``-wide *extension* tile,
+        accumulated into the carried QT — Eq. (3) (or the raw-Euclidean
+        norm identity) then turns the same QT into every rung's
+        distances with that rung's stats, exclusion band, and validity
+        count.
+
+    Exactness: the carried QT is the exact scalar product at every rung
+    (the extension tiles add precisely the missing terms), and the
+    per-rung stats/masks are the single-length engine's own — so each
+    rung's profile is the same quantity the independent sweep computes,
+    differing only in floating-point summation order.
+
+``cross_length_lb``
+    The cross-length lower bound (ARCHITECTURE.md has the proof):
+
+        d2_{s'}(i, j) >= s * (a_i - b_j)^2 + a_i * b_j * d2_s(i, j)
+
+    with ``a_i = sigma_s(i) / sigma_s'(i)`` (and ``b_j`` likewise), for
+    any pair valid at both lengths and ``s' > s``.  Minimizing over the
+    neighbor gives a per-window bound on the next rung's nnd profile
+    from the previous rung's — ``search_pan`` uses it as a runtime
+    cross-check of the incremental sweep (a violated bound means a
+    broken QT carry, not a data property), and it is the hook for
+    rung-abandoning schedules (ROADMAP).
+
+Work accounting (docs/cps.md): pan lanes are **width-normalized** — an
+extension tile sweeps the same (rows x cols) cells but computes only
+``d`` of the ``s_r`` scalar products a from-scratch lane needs, so it
+counts ``d / s_r`` of a lane per cell (``pan_lanes``).  That is what
+makes the ladder's total comparable with (and far below) ``R``
+independent sweeps.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels.common import (ceil_div, exclusion_mask, series_csums,
+                              stats_from_csums, znorm_d2_formula)
+from ..kernels.registry import get_dot_backend, resolve_backend
+
+__all__ = ["PanEngine", "canonical_ladder", "pan_lanes",
+           "cross_length_lb", "global_normalized_topk"]
+
+
+def canonical_ladder(windows) -> Tuple[int, ...]:
+    """Sorted, deduplicated tuple of window lengths — the *ladder
+    bucket* every pan plan is keyed on (two specs whose windows agree
+    up to order/duplicates share one compiled sweep)."""
+    if isinstance(windows, (int, np.integer)):
+        windows = (windows,)
+    lad = tuple(sorted({int(v) for v in windows}))
+    if not lad:
+        raise ValueError("empty window ladder")
+    if lad[0] < 2:
+        raise ValueError(f"window length must be >= 2, got {lad[0]}")
+    return lad
+
+
+def pan_lanes(ladder: Sequence[int], n_rows: int, n_cols: int) -> int:
+    """Width-normalized lanes of one pan sweep over an (n_rows x
+    n_cols) tile grid: the base rung sweeps full lanes, each later
+    rung ``(s_r - s_{r-1}) / s_r`` of a lane per cell (docs/cps.md)."""
+    cells = n_rows * n_cols
+    total = cells                       # base rung: full-width lanes
+    for prev, cur in zip(ladder[:-1], ladder[1:]):
+        total += ceil_div(cells * (cur - prev), cur)
+    return int(total)
+
+
+class PanEngine:
+    """Ladder-shared tile sweep for one series (jit/shard_map-safe).
+
+    Construct inside a jitted plan body, like ``TileEngine`` — all ops
+    are jnp.  ``series`` is the (bucketed) series; the engine pads it
+    so every grid window id can be sliced at the *longest* rung.
+    ``n_valid`` (traced scalar) is the true window count at the **base
+    rung**; rung ``r``'s own count is derived as
+    ``n_valid - (s_r - s_0)``.
+    """
+
+    def __init__(self, series, ladder: Tuple[int, ...], *,
+                 block: int = 256, backend: Optional[str] = None,
+                 znorm: bool = True, n_valid=None):
+        self.ladder = canonical_ladder(ladder)
+        self.block = int(block)
+        self.backend = resolve_backend(backend)
+        self.znorm = bool(znorm)
+        s0, smax = self.ladder[0], self.ladder[-1]
+        x = jnp.asarray(series, jnp.float32)
+        self.n = x.shape[0] - s0 + 1            # base-rung window count
+        self.nb = ceil_div(self.n, self.block)
+        self.n_pad = self.nb * self.block
+        need = self.n_pad + smax - 1
+        self.series_pad = jnp.pad(x, (0, max(0, need - x.shape[0])))
+        self.n_valid = self.n if n_valid is None else n_valid
+        # one cumulative-sum pass -> every rung's stats, through the
+        # same stats_from_csums formula as sliding_stats_jnp — so
+        # in-range values are bit-identical to the single-length
+        # TileEngine's by construction.
+        csum, csum2 = series_csums(self.series_pad)
+        self.mu: List[jnp.ndarray] = []
+        self.sig: List[jnp.ndarray] = []
+        self.nrm: List[jnp.ndarray] = []        # raw ||window||^2
+        for s in self.ladder:
+            mu, sig, nrm = stats_from_csums(csum, csum2, s, self.n_pad)
+            self.mu.append(mu)
+            self.sig.append(sig)
+            self.nrm.append(nrm)
+
+    # ------------------------------------------------------------------
+    def _cand_blocks(self):
+        """Candidate-side materialization, once per sweep: the base
+        windows plus each rung's extension slab (total n_pad x s_max
+        floats — the pan analogue of ``TileEngine.all_windows``)."""
+        ids = jnp.arange(self.n_pad)
+        base = self.series_pad[ids[:, None]
+                               + jnp.arange(self.ladder[0])[None, :]]
+        exts = []
+        for prev, cur in zip(self.ladder[:-1], self.ladder[1:]):
+            off = prev + jnp.arange(cur - prev)
+            exts.append(self.series_pad[ids[:, None] + off[None, :]])
+        return base, exts
+
+    def rows(self, starts) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Pan sweep of the query blocks at ``starts`` (m,) against
+        every candidate: returns ``(d2, ngh)`` of shape
+        ``(m, R, block)`` — per rung, each query window's min squared
+        distance and the global candidate id realizing it.
+        """
+        dot = get_dot_backend(self.backend)
+        cand_base, cand_exts = self._cand_blocks()
+        cids = jnp.arange(self.n_pad, dtype=jnp.int32)
+        s0 = self.ladder[0]
+
+        def one(q0):
+            qi = q0 + jnp.arange(self.block, dtype=jnp.int32)
+            qs = jnp.clip(qi, 0, self.n_pad - 1)
+            q_base = self.series_pad[qs[:, None]
+                                     + jnp.arange(s0)[None, :]]
+            qt = dot(q_base, cand_base)         # carried QT inner prods
+            d2s, args = [], []
+            for r, s_r in enumerate(self.ladder):
+                if r:
+                    prev = self.ladder[r - 1]
+                    off = prev + jnp.arange(s_r - prev)
+                    q_ext = self.series_pad[qs[:, None] + off[None, :]]
+                    qt = qt + dot(q_ext, cand_exts[r - 1])
+                nv = self.n_valid - (s_r - s0)  # rung's own n_valid
+                if self.znorm:
+                    d2 = znorm_d2_formula(qt, s_r,
+                                          self.mu[r][qs],
+                                          self.sig[r][qs],
+                                          self.mu[r], self.sig[r])
+                else:
+                    d2 = jnp.maximum(self.nrm[r][qs][:, None]
+                                     + self.nrm[r][None, :]
+                                     - 2.0 * qt, 0.0)
+                d2 = jnp.where(exclusion_mask(qi, cids, s_r, nv),
+                               jnp.inf, d2)
+                d2s.append(jnp.min(d2, axis=1))
+                args.append(jnp.argmin(d2, axis=1).astype(jnp.int32))
+            return jnp.stack(d2s), jnp.stack(args)
+
+        return lax.map(one, jnp.asarray(starts, jnp.int32))
+
+    def profile(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """All rungs' full profiles: ``(d2, ngh)`` of shape
+        ``(R, n_pad)`` (entries past rung r's own window count are
+        masked +inf)."""
+        starts = jnp.arange(self.nb, dtype=jnp.int32) * self.block
+        d2, arg = self.rows(starts)             # (nb, R, block)
+        R = len(self.ladder)
+        return (d2.transpose(1, 0, 2).reshape(R, -1),
+                arg.transpose(1, 0, 2).reshape(R, -1))
+
+
+# ----------------------------------------------------------------------
+# cross-length lower bound (host side)
+# ----------------------------------------------------------------------
+def cross_length_lb(d2_prev: np.ndarray, sig_prev: np.ndarray,
+                    sig_next: np.ndarray) -> np.ndarray:
+    """Lower bound on the squared nnd profile at the *next* (longer)
+    rung from the previous rung's exact profile.
+
+    With ``a_i = sig_prev[i] / sig_next[i]`` the pairwise bound
+    ``d2_next(i, j) >= a_i * a_j * d2_prev(i, j)`` (ARCHITECTURE.md,
+    dropped ``(a_i - a_j)^2`` term) minimized over the neighbor gives
+
+        nnd2_next(i) >= a_i * min_j(a_j) * nnd2_prev(i).
+
+    Arguments are per-window arrays; ``sig_next`` has the next rung's
+    (shorter) window count and trims the others.  Degenerate windows
+    (sigma at the clamp floor) get the trivial bound 0.
+    """
+    n_next = sig_next.shape[0]
+    a = np.asarray(sig_prev[:n_next], np.float64) / \
+        np.asarray(sig_next, np.float64)
+    a = np.where(np.asarray(sig_next) <= 1e-9, 0.0, a)
+    if a.size == 0:
+        return np.zeros(0, np.float64)
+    return a * float(a.min()) * np.asarray(d2_prev[:n_next], np.float64)
+
+
+# ----------------------------------------------------------------------
+# global length-normalized ranking (host side)
+# ----------------------------------------------------------------------
+def global_normalized_topk(profiles: Sequence[np.ndarray],
+                           ladder: Sequence[int], k: int) -> List[dict]:
+    """Greedy top-k discords *across* rungs ranked by the
+    length-normalized distance ``d / sqrt(s)``, with interval-overlap
+    exclusion: a pick at ``(s, i)`` retires every candidate (at any
+    rung) whose window ``[j, j + s_r)`` overlaps ``[i, i + s)``.
+    Exact by construction — it scans the full exact profiles.
+    """
+    scores = []
+    for prof, s in zip(profiles, ladder):
+        p = np.asarray(prof, np.float64)
+        scores.append(np.where(np.isfinite(p), p / math.sqrt(s),
+                               -np.inf))
+    out: List[dict] = []
+    for _ in range(int(k)):
+        best_r, best_i, best_v = -1, -1, -np.inf
+        for r, sc in enumerate(scores):
+            if sc.size == 0:
+                continue
+            i = int(np.argmax(sc))
+            if sc[i] > best_v:
+                best_r, best_i, best_v = r, i, float(sc[i])
+        if best_r < 0 or not np.isfinite(best_v):
+            break
+        s_pick = int(ladder[best_r])
+        out.append({"s": s_pick, "position": best_i,
+                    "nnd": best_v * math.sqrt(s_pick),
+                    "score": best_v})
+        for r, sc in enumerate(scores):
+            s_r = int(ladder[r])
+            lo = max(0, best_i - s_r + 1)
+            hi = min(sc.size, best_i + s_pick)
+            sc[lo:hi] = -np.inf
+    return out

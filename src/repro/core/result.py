@@ -23,7 +23,7 @@ the full definition and per-plane mapping):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Tuple
 
 
 @dataclass
@@ -57,4 +57,45 @@ class DiscordResult:
         nnd = ",".join(f"{v:.4f}" for v in self.nnds)
         return (f"DiscordResult({self.method}: pos=[{pos}] nnd=[{nnd}] "
                 f"calls={self.calls} cps={self.cps:.2f} "
+                f"t={self.runtime_s:.3f}s)")
+
+
+@dataclass
+class PanResult:
+    """Outcome of a pan-length (window-ladder) discord search.
+
+    ``per_rung`` holds one :class:`DiscordResult` per ladder rung
+    (ascending ``s``) — each the exact equivalent of an independent
+    single-length search at that rung.  ``global_topk`` ranks discords
+    *across* rungs by the length-normalized distance ``d / sqrt(s)``
+    under interval-overlap exclusion (``core/pan.py``).
+
+    ``calls`` / ``tile_lanes`` are the sweep's width-normalized lanes
+    (docs/cps.md) — the whole point: one ladder sweep, not ``R``
+    independent ones.  ``lb_margin`` is the runtime cross-length
+    lower-bound check's worst slack (``>= ~0`` certifies the
+    incremental QT carry; see ``pan.cross_length_lb``).
+    """
+    per_rung: List[DiscordResult]
+    global_topk: List[dict]
+    ladder: Tuple[int, ...]
+    n: int                      # base-rung window count
+    calls: int
+    tile_lanes: int
+    runtime_s: float = 0.0
+    method: str = "pan"
+    lb_margin: float = 0.0
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def cps(self) -> float:
+        k = max(sum(r.k for r in self.per_rung), 1)
+        return self.calls / (self.n * k)
+
+    def __repr__(self) -> str:
+        rungs = ",".join(str(r.s) for r in self.per_rung)
+        top = ",".join(f"(s={g['s']},p={g['position']})"
+                       for g in self.global_topk)
+        return (f"PanResult({self.method}: ladder=[{rungs}] "
+                f"top=[{top}] calls={self.calls} "
                 f"t={self.runtime_s:.3f}s)")

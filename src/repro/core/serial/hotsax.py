@@ -60,6 +60,11 @@ def hotsax(series: np.ndarray, s: int, k: int = 1, *, P: int = 4,
                 nn, _, _, abandoned = scan_abandon(ctx, i, rest, nn, best)
             if not abandoned and np.isfinite(nn) and nn > best:
                 best, best_loc = float(nn), i
+        if best_loc < 0:
+            # k exceeds the non-overlapping discords: truncate rather
+            # than append the -1 sentinel (it would exclude every
+            # i < s - 1 from later rounds' overlap check)
+            break
         found_pos.append(best_loc)
         found_nnd.append(best)
     return DiscordResult(positions=found_pos, nnds=found_nnd,

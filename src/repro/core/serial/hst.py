@@ -199,6 +199,12 @@ def hst(series: np.ndarray, s: int, k: int = 1, *, P: int = 4,
                 if rest.size:                       # Sort_Remaining_Ext
                     order[pos:] = list(
                         rest[np.argsort(-st.nnd[rest], kind="stable")])
+        if best_loc < 0:
+            # k exceeds the non-overlapping discords: truncate rather
+            # than record the -1 sentinel, which would poison the next
+            # round's trivial-match check (|i - (-1)| < s excludes
+            # every i < s - 1)
+            break
         found_pos.append(best_loc)
         found_nnd.append(best)
 

@@ -71,14 +71,29 @@ def self_match(i, j, s: int):
     return abs(i - j) < s
 
 
+def smoothing_width(s: int) -> int:
+    """Eq. (6) smoothing window: the smallest *odd* width >= s + 1.
+
+    The paper smooths the nnd profile over ``s + 1`` samples; a
+    centered kernel needs an odd width, so even ``s`` uses exactly
+    ``s + 1`` and odd ``s`` rounds up to ``s + 2`` (the old code used
+    ``2*(s//2) + 1``, which silently *shrank* odd ``s`` to width
+    ``s``).  Single definition shared by the serial implementation and
+    ``hst_jax._smooth`` — keep them in lockstep.
+    """
+    half = (s + 1) // 2
+    return 2 * half + 1
+
+
 def moving_average_centered(x: np.ndarray, s: int) -> np.ndarray:
-    """Paper Eq. (6): centered moving average over s+1 samples.
+    """Paper Eq. (6): centered moving average over ~s+1 samples
+    (exactly :func:`smoothing_width`).
 
     Borders (where the full window does not fit) keep the raw value.
     """
     x = np.asarray(x, dtype=np.float64)
-    half = s // 2
-    width = 2 * half + 1
+    width = smoothing_width(s)
+    half = width // 2
     if x.shape[0] < width:
         return x.copy()
     kernel = np.full(width, 1.0 / width)

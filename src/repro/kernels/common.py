@@ -44,17 +44,33 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def sliding_stats_jnp(series, s: int):
-    """jnp twin of windows.sliding_stats (float32 path, clamped sigma)."""
+def series_csums(series):
+    """Zero-prefixed cumulative sums of x and x² (f32) — the one pass
+    every sliding-stats consumer derives from."""
     x = jnp.asarray(series, dtype=jnp.float32)
-    n = x.shape[0] - s + 1
-    csum = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
-    csum2 = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x * x)])
+    return (jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)]),
+            jnp.concatenate([jnp.zeros(1, x.dtype),
+                             jnp.cumsum(x * x)]))
+
+
+def stats_from_csums(csum, csum2, s: int, n: int):
+    """(mu, clamped sigma, raw ||window||²) of the ``n`` windows of
+    length ``s`` from precomputed cumulative sums.  THE sliding-stats
+    formula — ``sliding_stats_jnp`` and the pan-length ladder both
+    delegate here, so per-rung stats are bit-identical to the
+    single-length engine's by construction."""
     winsum = csum[s:s + n] - csum[:n]
     winsum2 = csum2[s:s + n] - csum2[:n]
     mu = winsum / s
     var = jnp.maximum(winsum2 / s - mu * mu, 0.0)
-    sigma = jnp.maximum(jnp.sqrt(var), 1e-10)
+    return mu, jnp.maximum(jnp.sqrt(var), 1e-10), winsum2
+
+
+def sliding_stats_jnp(series, s: int):
+    """jnp twin of windows.sliding_stats (float32 path, clamped sigma)."""
+    x = jnp.asarray(series, dtype=jnp.float32)
+    n = x.shape[0] - s + 1
+    mu, sigma, _ = stats_from_csums(*series_csums(x), s, n)
     return mu, sigma
 
 

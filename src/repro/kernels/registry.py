@@ -33,6 +33,20 @@ taking f32 window blocks (Bq, s)/(Bc, s), their per-window stats, and
 their *global* window ids (i32; negative or >= n_valid means padding),
 returning the masked (Bq, Bc) f32 d2 tile.  Register new hardware with
 ``@register_backend("name")``.
+
+The registry also carries a second, smaller primitive per backend: the
+**raw dot tile**
+
+    fn(q, c) -> dots            # (Bq, w) x (Bc, w) -> (Bq, Bc) f32
+
+with no stats, masking or Eq. (3) arithmetic.  It exists for the
+pan-length plan family (``core/pan.py``), whose VALMOD-style
+incremental sweep carries the QT inner products across window lengths
+and therefore needs bare scalar products at arbitrary widths (the full
+base width once, then each ladder step's small extension).  Register
+with ``@register_dot_backend("name")``; a backend without a registered
+dot tile falls back to the ``xla`` implementation (exact — it is the
+same contraction, just not hand-placed).
 """
 from __future__ import annotations
 
@@ -47,11 +61,12 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from .common import (default_interpret, exclusion_mask,
-                     pad_block_operands, znorm_d2_formula)
+                     pad_block_operands, pad_to, znorm_d2_formula)
 
 TileBackendFn = Callable[..., jnp.ndarray]
 
 _REGISTRY: Dict[str, TileBackendFn] = {}
+_DOT_REGISTRY: Dict[str, TileBackendFn] = {}
 _ALIASES = {"jnp": "xla", "ref": "numpy", "np": "numpy"}
 
 ENV_VAR = "REPRO_TILE_BACKEND"
@@ -63,6 +78,23 @@ def register_backend(name: str):
         _REGISTRY[name] = fn
         return fn
     return deco
+
+
+def register_dot_backend(name: str):
+    """Decorator: add a raw dot-tile backend under ``name``."""
+    def deco(fn: TileBackendFn) -> TileBackendFn:
+        _DOT_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_dot_backend(name: str) -> TileBackendFn:
+    """Raw dot-tile implementation for ``name`` (xla fallback)."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown tile backend {name!r}; available: "
+            f"{available_backends()}")
+    return _DOT_REGISTRY.get(name, _DOT_REGISTRY["xla"])
 
 
 def available_backends() -> tuple:
@@ -189,3 +221,57 @@ def tile_d2_pallas(qwin, qmu, qsig, qid, cwin, cmu, csig, cid, *,
         interpret=interpret,
     )(qwin, qmu, qsig, qid, cwin, cmu, csig, cid)
     return d2[:bq, :bc]
+
+
+# ----------------------------------------------------------------------
+# raw dot-tile backends (pan-length incremental QT)
+# ----------------------------------------------------------------------
+@register_dot_backend("xla")
+def dot_tile_xla(q, c):
+    return lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                           preferred_element_type=jnp.float32)
+
+
+def _dot_tile_np(q, c) -> np.ndarray:
+    return (np.asarray(q, np.float32)
+            @ np.asarray(c, np.float32).T).astype(np.float32)
+
+
+@register_dot_backend("numpy")
+def dot_tile_numpy(q, c):
+    out = jax.ShapeDtypeStruct((q.shape[0], c.shape[0]), jnp.float32)
+    return jax.pure_callback(_dot_tile_np, out, q, c)
+
+
+def _dot_tile_kernel(q_ref, c_ref, o_ref):
+    o_ref[...] = lax.dot_general(q_ref[...], c_ref[...],
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+
+@register_dot_backend("pallas")
+def dot_tile_pallas(q, c, *, interpret: bool | None = None):
+    """Gridded MXU dot tile.  Widths pad to the 128-lane tile with
+    zeros (dot products unchanged), rows to MXU sublanes; padded rows
+    are sliced off, so the tile is exact at any (Bq, Bc, w)."""
+    if interpret is None:
+        interpret = default_interpret()
+    bq, bc = q.shape[0], c.shape[0]
+    rows_q = BLOCK_Q if bq > BLOCK_Q else 8
+    q = pad_to(pad_to(q, 128, axis=1), rows_q, axis=0)
+    c = pad_to(pad_to(c, 128, axis=1), BLOCK_C, axis=0)
+    bq_p, w_p = q.shape
+    bc_p = c.shape[0]
+    blk_q = min(bq_p, BLOCK_Q)
+    dots = pl.pallas_call(
+        _dot_tile_kernel,
+        grid=(bq_p // blk_q, bc_p // BLOCK_C),
+        in_specs=[
+            pl.BlockSpec((blk_q, w_p), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_C, w_p), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_q, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bq_p, bc_p), jnp.float32),
+        interpret=interpret,
+    )(q, c)
+    return dots[:bq, :bc]

@@ -41,7 +41,21 @@ BACKEND_CHOICES = tuple(sorted(set(available_backends())
 
 
 def _parse_s(text: str):
-    """``"120"`` -> 120, ``"96,128"`` -> (96, 128) (multi-window)."""
+    """``"120"`` -> 120, ``"96,128"`` -> (96, 128) (multi-window),
+    ``"64:128:16"`` -> (64, 80, 96, 112, 128) (pan-length ladder;
+    ``hi`` inclusive, step defaults to 1)."""
+    if ":" in text:
+        parts = [int(p) for p in text.split(":") if p]
+        if len(parts) not in (2, 3):
+            raise argparse.ArgumentTypeError(
+                f"ladder must be lo:hi[:step], got {text!r}")
+        lo, hi = parts[0], parts[1]
+        step = parts[2] if len(parts) == 3 else 1
+        if step < 1 or hi < lo:
+            raise argparse.ArgumentTypeError(
+                f"ladder must have hi >= lo and step >= 1, got {text!r}")
+        rungs = tuple(range(lo, hi + 1, step))
+        return rungs[0] if len(rungs) == 1 else rungs
     parts = [int(p) for p in text.split(",") if p]
     return parts[0] if len(parts) == 1 else tuple(parts)
 
@@ -62,8 +76,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--E", type=float, default=0.5)
     ap.add_argument("--anomalies", type=int, default=2)
     ap.add_argument("--s", type=_parse_s, default=120,
-                    help="window length, or comma list for "
-                         "multi-window matrix_profile search")
+                    help="window length; a comma list (96,128) or a "
+                         "lo:hi:step ladder (64:128:16, hi inclusive) "
+                         "runs the pan-length matrix_profile search — "
+                         "every rung from one shared sweep, plus the "
+                         "global d/sqrt(s)-normalized top-k")
     ap.add_argument("-k", type=int, default=1)
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--alpha", type=int, default=4)
@@ -113,9 +130,21 @@ def main(argv=None):
     engine = DiscordEngine(spec)
     mesh = f", ndev={engine.ndev}" if engine.sharded else ""
     print(f"{spec} -> backend={engine.backend}{mesh}")
-    res = engine.search(x)
-    for r in res if isinstance(res, list) else [res]:
-        print(r)
+    if spec.multi_window:
+        pan = engine.search_pan(x)
+        for r in pan.per_rung:
+            print(r)
+        print(f"pan ladder {pan.ladder}: tile_lanes={pan.tile_lanes} "
+              f"(independent sweeps would cost "
+              f"{pan.extra['independent_lanes']}), lb_ok="
+              f"{pan.extra['lb_ok']}")
+        for g in pan.global_topk:
+            print(f"  global s={g['s']} pos={g['position']} "
+                  f"nnd={g['nnd']:.4f} nnd/sqrt(s)={g['score']:.4f}")
+    else:
+        res = engine.search(x)
+        for r in res if isinstance(res, list) else [res]:
+            print(r)
 
 
 if __name__ == "__main__":

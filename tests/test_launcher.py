@@ -79,6 +79,24 @@ def test_multi_window_s_parses_to_tuple():
     assert _spec(["--method", "mp", "--s", "96"]).s == 96
 
 
+def test_ladder_s_parses_lo_hi_step():
+    """lo:hi:step (hi inclusive) builds the pan-length ladder."""
+    spec = _spec(["--method", "mp", "--s", "64:128:16"])
+    assert spec.s == (64, 80, 96, 112, 128) and spec.multi_window
+    # step defaults to 1; a single-rung ladder collapses to scalar s
+    assert _spec(["--method", "mp", "--s", "30:32"]).s == (30, 31, 32)
+    assert _spec(["--method", "mp", "--s", "96:96:8"]).s == 96
+    # hi inclusive when the step lands on it (not python-range exclusive)
+    assert _spec(["--method", "mp", "--s", "64:120:8"]).s[-1] == 120
+    assert _spec(["--method", "mp", "--s", "64:126:8"]).s[-1] == 120
+
+
+@pytest.mark.parametrize("bad", ["128:64:8", "64:128:0", "64:128:16:2"])
+def test_ladder_s_rejects_malformed(bad):
+    with pytest.raises(SystemExit):      # argparse type error -> exit 2
+        build_parser().parse_args(["--method", "mp", "--s", bad])
+
+
 def test_raw_flag_maps_to_znorm():
     assert _spec(["--method", "hst", "--raw"]).znorm is False
     assert _spec(["--method", "hst"]).znorm is True

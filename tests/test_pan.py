@@ -1,0 +1,359 @@
+"""Pan-length plan family (PR 4) + the edge-case bugfix sweep.
+
+  1. PARITY — ``search_pan`` results match L independent per-length
+     ``matrix_profile`` searches (positions exactly, nnds numerically)
+     on every backend, in both znorm modes; the swept ``tile_lanes``
+     are strictly below the independent-sweep total.
+  2. COMPILE-ONCE — a second same-ladder, same-bucket ``search_pan``
+     adds zero new jit traces; the ladder canonicalizes (sorted,
+     deduped) into the plan key.
+  3. LANES — an 8-rung ladder sweeps < 0.6x the independent lanes
+     (the acceptance bar of the width-normalized accounting in
+     docs/cps.md), and per-rung ``calls`` sum to the pan total.
+  4. BOUNDS — the cross-length lower bound is a true lower bound of
+     brute-force profiles, and the runtime ``lb_ok`` self-check holds.
+  5. GLOBAL RANKING — ``d / sqrt(s)`` greedy merge respects interval-
+     overlap exclusion across rungs.
+  6. SHARDED — a 4-device (forced host platform, subprocess) pan
+     search matches the local one with zero retraces on repeat.
+  7. SATELLITES — serial hst/hotsax truncate when k exceeds the
+     non-overlapping discords (no -1 sentinel poisoning later
+     rounds); Eq. (6) smoothing width is the documented convention
+     with serial-vs-jax parity; hst_jax tiny-series geometry stays
+     exact across backends.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import DiscordEngine, PanResult, SearchSpec, find_discords
+from repro.core.pan import (canonical_ladder, cross_length_lb,
+                            global_normalized_topk, pan_lanes)
+from repro.core.serial.brute import exact_nnd_profile
+from repro.core.windows import sliding_stats, smoothing_width
+
+BACKENDS = ("numpy", "xla", "pallas")
+LADDER = (24, 32, 40)
+
+
+def _series(seed, n=600):
+    rng = np.random.default_rng(seed)
+    x = np.sin(0.07 * np.arange(n)) + 0.1 * rng.normal(size=n)
+    p = int(rng.integers(120, n - 120))
+    x[p:p + 40] += rng.uniform(0.7, 1.2) * np.sin(
+        np.linspace(0, np.pi, 40))
+    return x
+
+
+# ----------------------------------------------------------------------
+# ladder canonicalization
+# ----------------------------------------------------------------------
+def test_canonical_ladder():
+    assert canonical_ladder((64, 48, 64, 56)) == (48, 56, 64)
+    assert canonical_ladder(32) == (32,)
+    assert canonical_ladder([40]) == (40,)
+    with pytest.raises(ValueError):
+        canonical_ladder(())
+    with pytest.raises(ValueError):
+        canonical_ladder((1, 32))
+
+
+def test_pan_lanes_formula():
+    # base rung full lanes + Delta/s share per later rung
+    assert pan_lanes((32,), 100, 100) == 10_000
+    assert pan_lanes((32, 40), 100, 100) == 10_000 + 2_000
+    assert pan_lanes((32, 40, 48), 10, 10) == 100 + 20 + 17  # ceil
+
+
+# ----------------------------------------------------------------------
+# parity with independent per-length searches
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("znorm", (True, False))
+def test_pan_matches_independent_searches(backend, znorm):
+    x = _series(1)
+    eng = DiscordEngine(SearchSpec(s=LADDER, k=2,
+                                   method="matrix_profile",
+                                   backend=backend, znorm=znorm))
+    pan = eng.search_pan(x)
+    assert isinstance(pan, PanResult)
+    assert pan.ladder == LADDER
+    indep_lanes = 0
+    for r in pan.per_rung:
+        one_eng = DiscordEngine(SearchSpec(s=r.s, k=2,
+                                           method="matrix_profile",
+                                           backend=backend,
+                                           znorm=znorm))
+        one = one_eng.search(x)
+        assert r.positions == one.positions, (backend, znorm, r.s)
+        assert np.allclose(r.nnds, one.nnds, rtol=1e-3, atol=1e-2), \
+            (backend, znorm, r.s)
+        indep_lanes += one_eng.stats.tile_lanes
+    # the whole point: one ladder sweep beats L independent sweeps
+    assert pan.tile_lanes < indep_lanes
+    assert eng.stats.tile_lanes == pan.tile_lanes
+    assert pan.extra["lb_ok"], pan.lb_margin
+
+
+def test_pan_rung_profiles_match_brute():
+    x = _series(2, n=420)
+    eng = DiscordEngine(SearchSpec(s=(16, 24, 32), k=2,
+                                   method="matrix_profile",
+                                   backend="xla"))
+    pan = eng.search_pan(x)
+    from repro.core.tiles import topk_nonoverlapping
+    for r in pan.per_rung:
+        prof = exact_nnd_profile(np.asarray(x, np.float64), r.s)
+        pos, vals = topk_nonoverlapping(prof, 2, r.s)
+        assert r.positions == pos, r.s
+        assert np.allclose(r.nnds, vals, atol=3e-3), r.s
+
+
+# ----------------------------------------------------------------------
+# compile-once
+# ----------------------------------------------------------------------
+def test_pan_zero_retrace_second_same_ladder_search():
+    eng = DiscordEngine(SearchSpec(s=LADDER, k=1,
+                                   method="matrix_profile",
+                                   backend="xla"))
+    eng.search_pan(_series(3, 500))
+    assert eng.stats.traces == 1 and eng.stats.plans == 1
+    eng.search_pan(_series(4, 460))       # same 512 bucket: no retrace
+    assert eng.stats.traces == 1, \
+        "same (ladder, bucket) pan search must not retrace"
+    assert eng.stats.searches == 2
+    # an explicit ladder in a different order/duplication canonicalizes
+    # into the SAME plan key
+    eng.search_pan(_series(5, 480), ladder=(40, 24, 32, 40))
+    assert eng.stats.traces == 1
+    eng.search_pan(_series(6, 700))       # new 1024 bucket: one trace
+    assert eng.stats.traces == 2 and eng.stats.plans == 2
+
+
+def test_multi_window_search_routes_through_pan_in_spec_order():
+    x = _series(7, 450)
+    eng = DiscordEngine(SearchSpec(s=(40, 24), k=1,
+                                   method="matrix_profile",
+                                   backend="xla"))
+    r40, r24 = eng.search(x)              # spec order, not ladder order
+    assert (r40.s, r24.s) == (40, 24)
+    assert eng.stats.plans == 1           # one pan plan for both rungs
+    assert r24.extra["ladder"] == (24, 40)
+
+
+# ----------------------------------------------------------------------
+# lane accounting (the acceptance bar)
+# ----------------------------------------------------------------------
+def test_eight_rung_ladder_sweeps_under_0p6x_independent():
+    ladder = tuple(range(48, 105, 8))     # 8 rungs
+    assert len(ladder) == 8
+    x = _series(8, 900)
+    eng = DiscordEngine(SearchSpec(s=ladder, k=1,
+                                   method="matrix_profile",
+                                   backend="xla"))
+    pan = eng.search_pan(x)
+    assert pan.tile_lanes < 0.6 * pan.extra["independent_lanes"], \
+        (pan.tile_lanes, pan.extra["independent_lanes"])
+    # per-rung calls decompose the pan total exactly
+    assert sum(r.calls for r in pan.per_rung) == pan.tile_lanes
+    # and the independent baseline is what L single-length engines
+    # would actually sweep over the same bucket
+    indep = 0
+    for s in ladder:
+        one = DiscordEngine(SearchSpec(s=s, k=1,
+                                       method="matrix_profile",
+                                       backend="xla"))
+        one.search(x)
+        indep += one.stats.tile_lanes
+    assert pan.extra["independent_lanes"] == indep
+
+
+# ----------------------------------------------------------------------
+# cross-length lower bound
+# ----------------------------------------------------------------------
+def test_cross_length_lb_is_a_true_lower_bound():
+    for seed, (s, s_next) in ((0, (16, 24)), (1, (20, 21)),
+                              (2, (16, 48))):
+        x = _series(seed, n=300)
+        d2_prev = exact_nnd_profile(x, s) ** 2
+        d2_next = exact_nnd_profile(x, s_next) ** 2
+        sig_prev = sliding_stats(x, s)[1]
+        sig_next = sliding_stats(x, s_next)[1]
+        lb = cross_length_lb(d2_prev, sig_prev, sig_next)
+        n_next = d2_next.shape[0]
+        assert np.all(d2_next >= lb[:n_next] - 1e-6), (seed, s, s_next)
+
+
+def test_raw_mode_monotone_bound():
+    # raw Euclidean d2 can only grow when the window extends
+    x = _series(9, 300)
+    d16 = exact_nnd_profile(x, 16, znorm=False) ** 2
+    d24 = exact_nnd_profile(x, 24, znorm=False) ** 2
+    assert np.all(d24 >= d16[:d24.shape[0]] - 1e-9)
+
+
+# ----------------------------------------------------------------------
+# global length-normalized ranking
+# ----------------------------------------------------------------------
+def test_global_topk_overlap_exclusion():
+    # two rungs; rung-1 peak inside rung-0 pick's interval is excluded
+    p0 = np.zeros(100)
+    p0[50] = 8.0                           # score 8/sqrt(16) = 2.0
+    p1 = np.zeros(90)
+    p1[55] = 9.0                           # overlaps pick; 9/sqrt(26)
+    p1[10] = 7.0                           # clear second pick
+    got = global_normalized_topk([p0, p1], (16, 26), 2)
+    assert got[0] == {"s": 16, "position": 50, "nnd": 8.0,
+                      "score": pytest.approx(2.0)}
+    assert got[1]["s"] == 26 and got[1]["position"] == 10
+    # scores come out non-increasing
+    assert got[0]["score"] >= got[1]["score"]
+
+
+def test_pan_result_global_topk_does_not_overlap():
+    x = _series(10, 700)
+    pan = DiscordEngine(SearchSpec(s=(24, 32, 48), k=3,
+                                   method="matrix_profile",
+                                   backend="xla")).search_pan(x)
+    picks = pan.global_topk
+    assert picks and len(picks) <= 3
+    for i, a in enumerate(picks):
+        for b in picks[i + 1:]:
+            lo = max(a["position"], b["position"])
+            hi = min(a["position"] + a["s"], b["position"] + b["s"])
+            assert lo >= hi, (a, b)        # intervals disjoint
+
+
+def test_search_pan_rejects_non_profile_methods():
+    eng = DiscordEngine(SearchSpec(s=32, method="hst"))
+    with pytest.raises(ValueError, match="profile plan"):
+        eng.search_pan(_series(11, 300), ladder=(24, 32))
+
+
+# ----------------------------------------------------------------------
+# sharded pan (forced 4-device host platform, subprocess)
+# ----------------------------------------------------------------------
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+from repro.core import DiscordEngine, SearchSpec
+
+rng = np.random.default_rng(0)
+x = np.sin(0.06 * np.arange(1800)) + 0.12 * rng.normal(size=1800)
+x[800:870] += 1.2 * np.sin(np.linspace(0, np.pi, 70))
+ladder = (48, 64, 80)
+
+sh = DiscordEngine(SearchSpec(s=ladder, k=2, method="matrix_profile",
+                              backend="xla", ndev=4))
+pan = sh.search_pan(x)
+t1 = sh.stats.traces
+sh.search_pan(x[:1700])                 # same bucket: zero new traces
+loc = DiscordEngine(SearchSpec(s=ladder, k=2,
+                               method="matrix_profile",
+                               backend="xla")).search_pan(x)
+print(json.dumps({
+    "ndev": sh.ndev,
+    "traces_first": t1,
+    "traces_second": sh.stats.traces,
+    "positions": [r.positions for r in pan.per_rung],
+    "local_positions": [r.positions for r in loc.per_rung],
+    "nnds": [r.nnds for r in pan.per_rung],
+    "local_nnds": [r.nnds for r in loc.per_rung],
+    "lb_ok": pan.extra["lb_ok"],
+}))
+"""
+
+
+def test_pan_sharded_matches_local_and_compiles_once():
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rep["ndev"] == 4
+    assert rep["traces_first"] == 1
+    assert rep["traces_second"] == 1, "sharded pan must not retrace"
+    assert rep["positions"] == rep["local_positions"]
+    assert np.allclose(np.concatenate(rep["nnds"]),
+                       np.concatenate(rep["local_nnds"]), rtol=1e-4)
+    assert rep["lb_ok"]
+
+
+# ----------------------------------------------------------------------
+# satellite: serial k > available truncation
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("method", ("hst", "hotsax"))
+def test_serial_truncates_when_k_exceeds_available(method):
+    rng = np.random.default_rng(0)
+    x = np.sin(0.1 * np.arange(300)) + 0.1 * rng.normal(size=300)
+    s = 100                                # at most 3 non-overlapping
+    with pytest.warns(DeprecationWarning):
+        ref = find_discords(x, s, 6, method="brute")
+        r = find_discords(x, s, 6, method=method)
+    assert r.k == ref.k < 6
+    assert all(p >= 0 for p in r.positions)
+    # the old -1 sentinel excluded every i < s-1 from later rounds;
+    # position 0 IS one of the non-overlapping discords here
+    assert sorted(r.positions) == sorted(ref.positions)
+    assert np.allclose(sorted(r.nnds), sorted(ref.nnds), rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# satellite: Eq. (6) smoothing convention
+# ----------------------------------------------------------------------
+def test_smoothing_width_convention():
+    assert smoothing_width(8) == 9         # even s: exactly s + 1
+    assert smoothing_width(7) == 9         # odd s: rounds UP to s + 2
+    assert smoothing_width(2) == 3
+
+
+@pytest.mark.parametrize("s", (7, 8, 15, 16))
+def test_smoothing_serial_vs_jax_parity(s):
+    import jax.numpy as jnp
+    from repro.core.hst_jax import _smooth
+    from repro.core.windows import moving_average_centered
+    x = np.random.default_rng(s).normal(size=200)
+    serial = moving_average_centered(x, s)
+    jaxed = np.asarray(_smooth(jnp.asarray(x, jnp.float32), s))
+    assert np.allclose(serial, jaxed, atol=1e-5)
+    # borders keep the raw value on both
+    half = smoothing_width(s) // 2
+    assert np.allclose(serial[:half], x[:half])
+    assert np.allclose(jaxed[-half:], np.asarray(x[-half:], np.float32))
+
+
+# ----------------------------------------------------------------------
+# satellite: hst_jax tiny-series geometry
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hst_jax_tiny_series_exact(backend):
+    rng = np.random.default_rng(3)
+    for n, s in ((40, 8), (60, 8), (20, 4)):
+        x = np.sin(0.3 * np.arange(n)) + 0.2 * rng.normal(size=n)
+        with pytest.warns(DeprecationWarning):
+            ref = find_discords(x, s, 1, method="brute")
+            r = find_discords(x, s, 1, method="hst_jax",
+                              backend=backend)
+        assert r.positions == ref.positions, (n, s, backend)
+        assert r.nnds[0] == pytest.approx(ref.nnds[0], abs=1e-3)
+        assert r.extra["block"] <= max(8, -(-(n - s + 1) // 8) * 8)
+
+
+@pytest.mark.parametrize("znorm", (True, False))
+def test_engine_tiny_series_exact_every_backend(znorm):
+    rng = np.random.default_rng(4)
+    n, s = 50, 8                           # n_seq = 43 < one block
+    x = np.sin(0.25 * np.arange(n)) + 0.2 * rng.normal(size=n)
+    ref = exact_nnd_profile(np.asarray(x, np.float64), s, znorm=znorm)
+    from repro.core.tiles import topk_nonoverlapping
+    pos, vals = topk_nonoverlapping(ref, 1, s)
+    for backend in BACKENDS:
+        r = DiscordEngine(SearchSpec(s=s, k=1, method="matrix_profile",
+                                     backend=backend,
+                                     znorm=znorm)).search(x)
+        assert r.positions == pos, (backend, znorm)
+        assert np.allclose(r.nnds, vals, atol=1e-2), (backend, znorm)
