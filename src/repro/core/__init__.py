@@ -14,10 +14,10 @@ Layers:
   * api                        — deprecated one-shot wrappers
 """
 from .api import find_discords, find_discords_batched
-from .engine import DiscordEngine, DiscordStream, EngineStats
+from .engine import DiscordEngine, DiscordStream, EngineStats, PanStream
 from .result import DiscordResult, PanResult
 from .spec import SearchSpec
 
-__all__ = ["SearchSpec", "DiscordEngine", "DiscordStream",
+__all__ = ["SearchSpec", "DiscordEngine", "DiscordStream", "PanStream",
            "EngineStats", "DiscordResult", "PanResult",
            "find_discords", "find_discords_batched"]

@@ -44,13 +44,31 @@ Mesh-sharded plan family (the ring fold-in, docs/ARCHITECTURE.md):
     only its own candidate shard against the new tail windows and the
     per-shard minima are min-folded globally.
 
-Pan-length plan family (``core/pan.py``, docs/ARCHITECTURE.md §3b):
+Pan-length plan family (``core/pan.py``, docs/ARCHITECTURE.md §3b,
+docs/pan.md for the user guide):
     ``search_pan`` runs a whole *ladder* of window lengths from one
     QT-carrying tile sweep — the base rung pays full-width dot tiles,
     each later rung only its extension width — plan-cached per
     ``(canonical ladder, length-bucket)`` (``("pan", ...)`` locally,
     ``("pan_ring", ...)`` with the query blocks sharded across the
-    mesh).  Multi-window specs route ``search`` through it.
+    mesh).  Multi-window specs route ``search`` through it, and the
+    ladder is a full citizen of every session plane:
+
+      * **streaming** — ``open_stream`` on a multi-window spec returns
+        a :class:`PanStream` whose appends sweep only the tail rows at
+        every rung from one carried QT (``("pan_tail", ...)`` plans;
+        candidate-sharded ``("pan_tail_ring", ...)`` on meshed
+        sessions);
+      * **batched** — ``search_batched`` on a multi-window spec runs
+        the (B, ladder) plan (``("pan_batched", ...)``, vmapped on
+        ``xla``, scanned elsewhere; two-level sharded layout);
+      * **global-top-k-only** — ``search_pan(schedule="lb_abandon")``
+        sweeps rungs sequentially through carried-QT
+        ``("pan_base", ...)`` / ``("pan_step", ...)`` plans and skips
+        any rung whose ``pan.cross_length_ub`` bracket provably cannot
+        beat the current k-th global ``d/sqrt(s)`` pick — skips are
+        re-verified against the final top-k, so the result equals the
+        all-rung sweep's.
 
 Every compiled plan body bumps ``stats.traces`` when (and only when)
 it is traced, so tests can assert the compile-once contract directly.
@@ -62,6 +80,7 @@ derived ``cps``.
 from __future__ import annotations
 
 import functools
+import math
 import os
 import time
 from dataclasses import dataclass
@@ -74,13 +93,15 @@ from jax import lax
 
 from ..kernels.common import ceil_div
 from ..kernels.registry import resolve_backend
-from .pan import (PanEngine, canonical_ladder, cross_length_lb,
-                  global_normalized_topk, pan_lanes)
+from .pan import (PanEngine, canonical_ladder, cross_length_ub,
+                  global_normalized_topk, ladder_lb_margin, pan_lanes,
+                  pan_rung_shares)
 from .result import DiscordResult, PanResult
 from .spec import SearchSpec, length_bucket
 from .tiles import TileEngine, topk_nonoverlapping
+from .windows import sliding_stats
 
-__all__ = ["DiscordEngine", "DiscordStream", "EngineStats",
+__all__ = ["DiscordEngine", "DiscordStream", "PanStream", "EngineStats",
            "ring_series_threshold"]
 
 
@@ -503,6 +524,193 @@ class DiscordEngine:
             return fn
         return self._get_plan(("pan_ring", ladder, Lb, (ndev,)), build)
 
+    def _pan_tail_plan(self, ladder: tuple, Lb: int, Qb: int):
+        """Streaming pan append: only the tail rows, at every rung.
+
+        (series_pad (Lb,), q0, n_valid0) ->
+            (row_d2 (R, Qb), row_ngh, col_d2 (R, n_pad), col_ngh)
+
+        Rows are the ``Qb`` (bucketed, masked) base-rung window ids
+        from ``q0`` — the appended tail, spanning every rung's new
+        windows — swept against every candidate with the QT carried
+        across rungs exactly like the full sweep (``PanEngine.tail``):
+        an append pays base-rung tail tiles plus Δ-wide extensions
+        only.  Row minima are the new windows' exact per-rung nnds;
+        column minima fold new-neighbor improvements into each rung's
+        old profile.
+        """
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, q0, n_valid0):
+                self.stats.traces += 1
+                peng = PanEngine(series_pad, ladder, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid0)
+                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+                return peng.tail(qids)
+            return fn
+        return self._get_plan(("pan_tail", ladder, Lb, Qb), build)
+
+    def _pan_tail_sharded_plan(self, ladder: tuple, Lb: int, Qb: int):
+        """Sharded pan append: same contract as ``_pan_tail_plan`` but
+        the *candidates* are sharded — each device carries the QT for
+        the tail queries against only the candidate id range it owns,
+        per-device row minima are min-folded globally and the
+        per-device column slices concatenate back to the full grid.
+        No znorm guard: the pan body computes raw distances natively
+        from the carried QT.
+        """
+        spec, be = self.spec, self.backend
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+        n_pad, per, n_sh = self._shard_geom(ladder[0], Lb, ndev)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS
+
+            def shard_body(series_pad, q0, n_valid0):
+                dev = lax.axis_index(AXIS)
+                peng = PanEngine(series_pad, ladder, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid0[0], n_pad=n_sh)
+                qids = q0[0] + jnp.arange(Qb, dtype=jnp.int32)
+                rd2, rng, cd2, cng = peng.tail(qids, dev * per, per)
+                return rd2[None], rng[None], cd2, cng
+
+            sweep = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(None), P(None), P(None)),
+                out_specs=(P(AXIS, None, None), P(AXIS, None, None),
+                           P(None, AXIS), P(None, AXIS)),
+                check_rep=False)
+
+            def fn(series_pad, q0, n_valid0):
+                self.stats.traces += 1
+                rm, ra, cm, ca = sweep(
+                    series_pad, jnp.full((1,), q0, jnp.int32),
+                    jnp.full((1,), n_valid0, jnp.int32))
+                sel = jnp.argmin(rm, axis=0)[None]    # global min-fold
+                row_d2 = jnp.take_along_axis(rm, sel, axis=0)[0]
+                row_ngh = jnp.take_along_axis(ra, sel, axis=0)[0]
+                return row_d2, row_ngh, cm[:, :n_pad], ca[:, :n_pad]
+            return fn
+        return self._get_plan(("pan_tail_ring", ladder, Lb, Qb,
+                               (ndev,)), build)
+
+    def _pan_base_plan(self, s0: int, Lb: int):
+        """(series_pad (Lb,), n_valid0) -> (qt (n_pad, n_pad), d2, ngh).
+
+        Rung 0 of the sequential LB-abandoning schedule: pays the
+        full-width base dot tiles once and *returns* the carried QT so
+        the ``("pan_step", ...)`` plans can extend it across plan
+        invocations (the host decides between steps whether the next
+        rung is worth evaluating at all).
+        """
+        spec, be = self.spec, self.backend
+        n_pad = self._n_pad(s0, Lb)
+
+        def build():
+            def fn(series_pad, n_valid0):
+                self.stats.traces += 1
+                peng = PanEngine(series_pad, (s0,), block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid0, n_pad=n_pad)
+                return peng.carry_rows()
+            return fn
+        return self._get_plan(("pan_base", s0, Lb), build)
+
+    def _pan_step_plan(self, sub_ladder: tuple, Lb: int, n_pad: int):
+        """(series_pad, qt (n_pad, n_pad), n_valid_from) ->
+        (qt', d2, ngh).
+
+        One evaluated step of the sequential schedule: extends the
+        carried QT from ``sub_ladder[0]`` (the last evaluated rung)
+        through every intermediate — possibly skipped — width to
+        ``sub_ladder[-1]``, accumulating the extension dots in exactly
+        the full ladder sweep's order (so evaluated profiles match it
+        whether or not the rungs in between were evaluated), and
+        applies Eq. (3) only at the final rung.  ``n_valid_from`` is
+        the window count at ``sub_ladder[0]``; ``n_pad`` is the *base*
+        rung's grid (the carried QT's geometry), not this sub-ladder's.
+        """
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, qt, n_valid_from):
+                self.stats.traces += 1
+                peng = PanEngine(series_pad, sub_ladder,
+                                 block=spec.block, backend=be,
+                                 znorm=spec.znorm, n_valid=n_valid_from,
+                                 n_pad=n_pad)
+                return peng.carry_rows(qt)
+            return fn
+        return self._get_plan(("pan_step", sub_ladder, Lb, n_pad),
+                              build)
+
+    def _pan_each(self, ladder: tuple, sub, n_valid0):
+        """Per-series ladder sweep of a (b, Lb) stack — the batching
+        rule of ``_profile_each`` applied to the pan body: vmapped
+        into one sweep on ``xla``; scanned elsewhere (pallas_call /
+        pure_callback don't batch)."""
+        spec, be = self.spec, self.backend
+
+        def one(x):
+            peng = PanEngine(x, ladder, block=spec.block, backend=be,
+                             znorm=spec.znorm, n_valid=n_valid0)
+            return peng.profile()
+
+        if be == "xla":
+            return jax.vmap(one)(sub)
+        return lax.map(one, sub)
+
+    def _pan_batched_plan(self, ladder: tuple, B: int, Lb: int):
+        """(stack (B, Lb), n_valid0) -> (d2 (B, R, n_pad), ngh).
+
+        The (B, ladder) plan: every series of the batch pays one
+        ladder sweep, batched by ``_pan_each``'s backend rule.
+        """
+        def build():
+            def fn(stack, n_valid0):
+                self.stats.traces += 1
+                return self._pan_each(ladder, stack, n_valid0)
+            return fn
+        return self._get_plan(("pan_batched", ladder, B, Lb), build)
+
+    def _pan_batched_sharded_plan(self, ladder: tuple, Bp: int,
+                                  Lb: int):
+        """(stack (Bp, Lb), n_valid (1,)) -> (d2 (Bp, R, n_pad), ngh).
+
+        Series-parallel level of the two-level batched pan layout:
+        the batch is sharded across devices, each device runs the
+        local (b, ladder) sweep over its own sub-batch.
+        """
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS
+
+            def shard_body(sub, n_valid):
+                return self._pan_each(ladder, sub, n_valid[0])
+
+            sweep = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(AXIS, None), P(None)),
+                out_specs=(P(AXIS, None, None), P(AXIS, None, None)),
+                check_rep=False)
+
+            def fn(stack, n_valid):
+                self.stats.traces += 1
+                return sweep(stack, n_valid)
+            return fn
+        return self._get_plan(("pan_batched_ring", ladder, Bp, Lb,
+                               (ndev,)), build)
+
     # -- searches ------------------------------------------------------
     def search(self, series, **kw
                ) -> Union[DiscordResult, List[DiscordResult]]:
@@ -545,7 +753,8 @@ class DiscordEngine:
         L = x.shape[0]
         if L < s + 1:
             raise ValueError(f"series of {L} points is too short for "
-                             f"window s={s}")
+                             f"window spec.s={s} (need at least "
+                             f"s + 1 points)")
         n_true = L - s + 1
         Lb = length_bucket(L)
         xp = np.zeros(Lb, np.float32)
@@ -584,7 +793,8 @@ class DiscordEngine:
         L = x.shape[0]
         if L < s + 1:
             raise ValueError(f"series of {L} points is too short for "
-                             f"window s={s}")
+                             f"window spec.s={s} (need at least "
+                             f"s + 1 points)")
         n_true = L - s + 1
         Lb = length_bucket(L)
         xp = np.zeros(Lb, np.float32)
@@ -614,10 +824,76 @@ class DiscordEngine:
                    "tile_lanes": lanes, "znorm": self.spec.znorm})
 
     # -- pan-length (window-ladder) searches ---------------------------
-    def search_pan(self, series, *, ladder=None) -> PanResult:
+    def _pan_finish(self, x, lad, d2s, *, lanes, cells, Lb, ndev,
+                    method, extra, k=None, rung_calls=None,
+                    rung_indices=None, ladder=None,
+                    calls=None) -> PanResult:
+        """Shared host-side pan post-processing: per-rung top-k, the
+        cross-length LB self-check (``pan.ladder_lb_margin``) and the
+        global ``d/sqrt(s)``-normalized ranking.  ``d2s`` is the
+        (R, >= n_r) squared profile stack for the rungs in ``lad``
+        (the evaluated sub-ladder on the LB schedule); ``cells`` the
+        swept (rows x cols) grid whose ``pan_rung_shares`` the
+        per-rung ``calls`` default to.  Overrides: ``rung_calls``
+        (per-rung lanes that are not the one-sweep shares — the LB
+        schedule's step lanes, the stream's accumulated shares),
+        ``rung_indices`` (each rung's position in the *full* ladder),
+        ``ladder`` (the full ladder for the result when ``lad`` is a
+        sub-ladder), ``calls`` (result total when it exceeds
+        ``lanes``, e.g. + refine calls).  Runtime fields are stamped
+        by the caller (``_stamp_pan_runtime``)."""
+        spec = self.spec
+        k = spec.k if k is None else int(k)
+        full_lad = lad if ladder is None else ladder
+        if rung_calls is None:
+            rung_calls = pan_rung_shares(lad, 1, cells)
+        L = x.shape[0]
+        per_rung, profiles, d2_list = [], [], []
+        for r, s_r in enumerate(lad):
+            n_r = L - s_r + 1
+            d2_r = d2s[r, :n_r]
+            prof = np.sqrt(np.maximum(d2_r, 0.0))
+            pos, vals = topk_nonoverlapping(
+                np.where(np.isfinite(prof), prof, -np.inf), k, s_r)
+            per_rung.append(DiscordResult(
+                positions=pos, nnds=vals, calls=rung_calls[r], n=n_r,
+                s=s_r, method=method, tile_lanes=rung_calls[r],
+                extra={"backend": self.backend, "bucket": Lb,
+                       "ladder": full_lad,
+                       "rung": r if rung_indices is None
+                       else rung_indices[r],
+                       "pan_tile_lanes": lanes,
+                       "znorm": spec.znorm}))
+            profiles.append(prof)
+            d2_list.append(d2_r)
+        lb_margin = ladder_lb_margin(x, lad, d2_list, spec.znorm)
+        lb_ok = bool(lb_margin >= -3e-3)
+        for rr in per_rung:
+            rr.extra["lb_ok"] = lb_ok
+        return PanResult(
+            per_rung=per_rung,
+            global_topk=global_normalized_topk(profiles, lad, k),
+            ladder=full_lad, n=L - full_lad[0] + 1,
+            calls=lanes if calls is None else calls,
+            tile_lanes=lanes, method=method,
+            lb_margin=float(lb_margin),
+            extra={"backend": self.backend, "bucket": Lb, "ndev": ndev,
+                   "znorm": spec.znorm, "lb_ok": lb_ok, **extra})
+
+    @staticmethod
+    def _stamp_pan_runtime(pan: PanResult, elapsed: float) -> PanResult:
+        """Honest per-ladder wall clock on the result and every rung."""
+        pan.runtime_s = elapsed
+        for rr in pan.per_rung:
+            rr.runtime_s = elapsed
+            rr.extra["per_rung_s"] = elapsed / max(len(pan.per_rung), 1)
+        return pan
+
+    def search_pan(self, series, *, ladder=None,
+                   schedule: str = "ladder") -> PanResult:
         """Exact discords at every rung of a window-length ladder from
         **one** shared tile sweep, plus the global length-normalized
-        (``d / sqrt(s)``) top-k across rungs.
+        (``d / sqrt(s)``) top-k across rungs (docs/pan.md).
 
         ``ladder`` defaults to the spec's window tuple; any iterable
         of lengths is accepted and canonicalized (sorted, deduped) —
@@ -626,26 +902,48 @@ class DiscordEngine:
         Runs on local sessions and (query-block-sharded) on meshed
         ones, in both znorm modes, on every tile backend.
 
-        Each ``per_rung`` entry matches an independent single-length
-        ``matrix_profile`` search at that rung (same positions, same
-        nnds up to summation order); the incremental QT carry is
-        cross-checked at runtime against the cross-length lower bound
-        (``lb_margin`` / ``extra["lb_ok"]``, see ``pan.cross_length_lb``).
+        ``schedule`` picks between the two plan families:
+
+        * ``"ladder"`` (default) — one all-rung sweep; every
+          ``per_rung`` entry matches an independent single-length
+          ``matrix_profile`` search at that rung (same positions, same
+          nnds up to summation order).
+        * ``"lb_abandon"`` (alias ``"lb"``) — sequential rungs with
+          cross-length-bracket skipping, for when only
+          ``global_normalized_topk`` matters: ``per_rung`` then holds
+          the *evaluated* rungs only, and skipped rungs' lane savings
+          are reported in ``extra`` (local sessions only).
+
+        Either way the incremental QT carry is cross-checked at
+        runtime against the cross-length lower bound (``lb_margin`` /
+        ``extra["lb_ok"]``, see ``pan.cross_length_lb``).
         """
         t0 = time.perf_counter()
         spec = self.spec
         if spec.method not in ("matrix_profile", "ring"):
             raise ValueError(
                 "search_pan runs the exact-profile plan family and "
-                "needs method='matrix_profile' (local) or 'ring' "
-                f"(mesh-sharded); got method={spec.method!r}")
+                "supports spec.method='matrix_profile' (local) or "
+                "'ring' (mesh-sharded); got "
+                f"spec.method={spec.method!r}.  Serial counted "
+                "methods, hst_jax and drag search one length at a "
+                "time through search().")
+        if schedule not in ("ladder", "lb", "lb_abandon"):
+            raise ValueError(
+                "schedule must be 'ladder' (one all-rung sweep, "
+                "per-rung results) or 'lb_abandon'/'lb' (sequential "
+                "rungs, LB-skipped when only the global top-k "
+                f"matters); got {schedule!r}")
         lad = canonical_ladder(spec.windows if ladder is None
                                else ladder)
         x = np.asarray(series, np.float64).ravel()
         L = x.shape[0]
         if L < lad[-1] + 1:
             raise ValueError(f"series of {L} points is too short for "
-                             f"the ladder's longest window {lad[-1]}")
+                             f"the ladder's longest window {lad[-1]} "
+                             f"(spec.s={spec.s} / ladder={lad})")
+        if schedule != "ladder":
+            return self._search_pan_lb(x, lad, t0)
         s0 = lad[0]
         n0 = L - s0 + 1
         Lb = length_bucket(L)
@@ -664,81 +962,231 @@ class DiscordEngine:
         d2s, _args = plan(jnp.asarray(xp), np.int32(n0))
         d2s = np.asarray(d2s, np.float64)
         lanes = pan_lanes(lad, n_rows, n_pad)
-        cells = n_rows * n_pad
-
-        from .windows import sliding_stats
-        per_rung, profiles = [], []
-        prev_d2 = prev_sig = None
-        lb_margin = np.inf
-        elapsed = None                  # filled once, shared per rung
-        # the sigma-ratio LB is the only consumer of host sigmas:
-        # skip the O(L) passes in raw mode (monotonicity bound) and
-        # for single-rung ladders (no transition to check)
-        need_sig = spec.znorm and len(lad) > 1
-        for r, s_r in enumerate(lad):
-            n_r = L - s_r + 1
-            d2_r = d2s[r, :n_r]
-            prof = np.sqrt(np.maximum(d2_r, 0.0))
-            pos, vals = topk_nonoverlapping(
-                np.where(np.isfinite(prof), prof, -np.inf),
-                spec.k, s_r)
-            rcalls = (cells if r == 0 else
-                      ceil_div(cells * (s_r - lad[r - 1]), s_r))
-            sig_r = sliding_stats(x, s_r)[1] if need_sig else None
-            if r:
-                # znorm: sigma-ratio lemma; raw: extension terms are
-                # squares, so d2 is monotone nondecreasing in s
-                lb = (cross_length_lb(prev_d2, prev_sig, sig_r)
-                      if spec.znorm else prev_d2[:n_r])
-                # inf-profile windows (no valid non-self match at a
-                # rung) would yield inf - inf = NaN and poison the
-                # min: check finite cells only
-                fin = np.isfinite(d2_r) & np.isfinite(lb)
-                if fin.any():
-                    lb_margin = min(lb_margin, float(np.min(
-                        (d2_r[fin] - lb[fin]) / s_r)))
-            prev_d2, prev_sig = d2_r, sig_r
-            per_rung.append(DiscordResult(
-                positions=pos, nnds=vals, calls=rcalls, n=n_r, s=s_r,
-                method=f"pan[{self.backend}]"
-                       if ndev == 1 else
-                       f"pan[{ndev}dev|{self.backend}]",
-                tile_lanes=rcalls,
-                extra={"backend": self.backend, "bucket": Lb,
-                       "ladder": lad, "rung": r,
-                       "pan_tile_lanes": lanes,
-                       "znorm": spec.znorm}))
-            profiles.append(prof)
-        if len(lad) == 1:
-            lb_margin = 0.0
-        global_topk = global_normalized_topk(profiles, lad, spec.k)
-        self.stats.searches += 1
-        self.stats.tile_lanes += lanes
-        elapsed = time.perf_counter() - t0
-        lb_ok = bool(lb_margin >= -3e-3)
-        for rr in per_rung:             # honest per-ladder wall clock
-            rr.runtime_s = elapsed
-            rr.extra["per_rung_s"] = elapsed / len(lad)
-            rr.extra["lb_ok"] = lb_ok
-        return PanResult(
-            per_rung=per_rung, global_topk=global_topk, ladder=lad,
-            n=n0, calls=lanes, tile_lanes=lanes, runtime_s=elapsed,
+        pan = self._pan_finish(
+            x, lad, d2s, lanes=lanes, cells=n_rows * n_pad, Lb=Lb,
+            ndev=ndev,
             method=(f"pan[{self.backend}]" if ndev == 1 else
                     f"pan[{ndev}dev|{self.backend}]"),
-            lb_margin=float(lb_margin),
-            extra={"backend": self.backend, "bucket": Lb,
-                   "ndev": ndev, "znorm": spec.znorm,
-                   "independent_lanes": self._independent_lanes(lad, Lb),
-                   "lb_ok": lb_ok})
+            extra={"independent_lanes": self._independent_lanes(lad, Lb),
+                   "schedule": "ladder"})
+        self.stats.searches += 1
+        self.stats.tile_lanes += lanes
+        return self._stamp_pan_runtime(pan, time.perf_counter() - t0)
+
+    # -- the sequential LB-abandoning rung schedule --------------------
+    def _rung_stats(self, x, cache: dict, s_r: int):
+        """Host stats of one rung for the cross-length bracket:
+        ``(mu, sigma)`` in znorm mode, raw window squared norms
+        otherwise (cached per rung within one schedule)."""
+        if s_r not in cache:
+            if self.spec.znorm:
+                cache[s_r] = sliding_stats(x, s_r)
+            else:
+                csum2 = np.concatenate(
+                    [[0.0], np.cumsum(np.asarray(x, np.float64) ** 2)])
+                n_r = x.shape[0] - s_r + 1
+                cache[s_r] = csum2[s_r:s_r + n_r] - csum2[:n_r]
+        return cache[s_r]
+
+    def _pan_picks(self, x, lad, evaluated: dict, k: int) -> List[dict]:
+        """The running global normalized top-k over the evaluated
+        rungs' profiles — the greedy picks the skip test is measured
+        against."""
+        idx = sorted(evaluated)
+        profiles = [np.sqrt(np.maximum(
+            evaluated[r][0][:x.shape[0] - lad[r] + 1], 0.0))
+            for r in idx]
+        return global_normalized_topk(profiles,
+                                      [lad[r] for r in idx], k)
+
+    def _exact_pairs(self, x, s_n: int, ii, jj, stats_cache: dict):
+        """Exact (f64, host) rung-``s_n`` distances of the window
+        pairs ``(ii, jj)`` — the LB-abandoning schedule's *refinement*
+        step: when the stats-only ``cross_length_ub`` is too loose, a
+        window's one known pair is re-measured at the next length
+        (VALMOD-style).  These are scalar Eq. (3)/raw evaluations —
+        counted in ``calls``, never in ``tile_lanes``."""
+        from .windows import windows_view
+        w = windows_view(np.asarray(x, np.float64), s_n)
+        a, b = w[ii], w[jj]
+        if self.spec.znorm:
+            mu, sig = self._rung_stats(x, stats_cache, s_n)
+            a = (a - mu[ii][:, None]) / sig[ii][:, None]
+            b = (b - mu[jj][:, None]) / sig[jj][:, None]
+        return np.sum((a - b) ** 2, axis=1)
+
+    def _rung_skippable(self, x, lad, r: int, le: int, evaluated: dict,
+                        stats_cache: dict, picks: List[dict], k: int):
+        """Can rung ``r`` be skipped given the current global picks?
+
+        Per window the threshold is the k-th pick's score — or, for a
+        window whose interval overlaps a pick, that pick's own (higher)
+        score: a candidate provably below an overlapping pick is
+        excluded the moment the pick is made, so it can never alter
+        the greedy outcome (docs/ARCHITECTURE.md §3b).  Windows whose
+        stats-only ``cross_length_ub`` fails the threshold get their
+        one known pair re-measured exactly (``_exact_pairs``).
+        Returns ``(skippable, refine_calls)``.
+        """
+        s_p, s_n = lad[le], lad[r]
+        n_n = x.shape[0] - s_n + 1
+        d2_p, ngh_p = evaluated[le]
+        if self.spec.znorm:
+            ub, partner = cross_length_ub(
+                d2_p, ngh_p, s_p, s_n, n_n,
+                stats_prev=self._rung_stats(x, stats_cache, s_p),
+                stats_next=self._rung_stats(x, stats_cache, s_n))
+        else:
+            ub, partner = cross_length_ub(
+                d2_p, ngh_p, s_p, s_n, n_n,
+                nrm_prev=self._rung_stats(x, stats_cache, s_p),
+                nrm_next=self._rung_stats(x, stats_cache, s_n))
+        if n_n <= 0:
+            return True, 0
+        kth = picks[k - 1]["score"] if len(picks) == k else -np.inf
+        thr = np.full(n_n, kth)
+        for p in picks:
+            lo = max(0, p["position"] - s_n + 1)
+            hi = min(n_n, p["position"] + p["s"])
+            thr[lo:hi] = np.maximum(thr[lo:hi], p["score"])
+        # strict, with float-slack headroom: the bracket is exact in
+        # real arithmetic but compares f32-swept profiles
+        need = thr - 1e-3 * np.maximum(1.0, np.abs(thr))
+        sc = np.sqrt(np.maximum(ub, 0.0)) / math.sqrt(s_n)
+        fail = np.flatnonzero(~(sc < need))
+        refines = 0
+        if fail.size:
+            fi = fail[partner[fail] >= 0]
+            if fi.size:
+                d2r = self._exact_pairs(x, s_n, fi, partner[fi],
+                                        stats_cache)
+                sc[fi] = np.sqrt(np.maximum(d2r, 0.0)) / math.sqrt(s_n)
+                refines = int(fi.size)
+            fail = np.flatnonzero(~(sc < need))
+        return fail.size == 0, refines
+
+    def _search_pan_lb(self, x, lad, t0) -> PanResult:
+        """Sequential LB-abandoning rung schedule: rungs sweep
+        lowest-first through carried-QT ``("pan_base", ...)`` /
+        ``("pan_step", ...)`` plans, and a rung is *skipped* when the
+        cross-length bracket proves no window in it can beat the
+        current k-th global normalized pick.  Because a later pick can
+        exclude earlier ones (the greedy k-th is not monotone in the
+        candidate set), every skip is re-verified against the *final*
+        top-k and violated skips are re-swept — so the returned
+        ``global_normalized_topk`` always equals the all-rung sweep's.
+        """
+        if self.sharded:
+            raise ValueError(
+                "schedule='lb_abandon' runs the local sequential plan "
+                "family only; on a mesh-sharded session (spec.ndev / "
+                "mesh= / spec.method='ring') use schedule='ladder', "
+                "which shards the ladder's query blocks across the "
+                "mesh")
+        spec = self.spec
+        L = x.shape[0]
+        Lb = length_bucket(L)
+        xp = np.zeros(Lb, np.float32)
+        xp[:L] = x
+        xp = jnp.asarray(xp)
+        n0 = L - lad[0] + 1
+        n_pad = self._n_pad(lad[0], Lb)
+        cells = n_pad * n_pad
+        stats_cache: dict = {}
+
+        qt, d2_0, ngh_0 = self._pan_base_plan(lad[0], Lb)(
+            xp, np.int32(n0))
+        evaluated = {0: (np.asarray(d2_0, np.float64),
+                         np.asarray(ngh_0, np.int64))}
+        rung_lanes = {0: cells}
+        lanes = cells
+        refine_calls = 0
+        skipped: List[int] = []
+        last = 0
+        for r in range(1, len(lad)):
+            picks = self._pan_picks(x, lad, evaluated, spec.k)
+            ok, refines = self._rung_skippable(
+                x, lad, r, last, evaluated, stats_cache, picks, spec.k)
+            refine_calls += refines
+            if ok:
+                skipped.append(r)
+                continue
+            step = self._pan_step_plan(tuple(lad[last:r + 1]), Lb,
+                                       n_pad)
+            qt, d2_r, ngh_r = step(xp, qt,
+                                   np.int32(L - lad[last] + 1))
+            evaluated[r] = (np.asarray(d2_r, np.float64),
+                            np.asarray(ngh_r, np.int64))
+            rung_lanes[r] = ceil_div(cells * (lad[r] - lad[last]),
+                                     lad[r])
+            lanes += rung_lanes[r]
+            last = r
+        # fixpoint re-verification: skips were tested against the
+        # *running* picks, and the greedy k-th is not monotone in the
+        # candidate set — a later pick can exclude earlier ones
+        resweeps = 0
+        while True:
+            picks = self._pan_picks(x, lad, evaluated, spec.k)
+            bad = None
+            for r in skipped:
+                le = max(e for e in evaluated if e < r)
+                ok, refines = self._rung_skippable(
+                    x, lad, r, le, evaluated, stats_cache, picks,
+                    spec.k)
+                refine_calls += refines
+                if not ok:
+                    bad = r
+                    break
+            if bad is None:
+                break
+            # the carried QT has moved past this rung: re-sweep it
+            # from scratch through the cached single-length plan
+            skipped.remove(bad)
+            s_b = lad[bad]
+            d2_b, ngh_b = self._profile_plan(s_b, Lb)(
+                xp, np.int32(L - s_b + 1))
+            evaluated[bad] = (np.asarray(d2_b, np.float64),
+                              np.asarray(ngh_b, np.int64))
+            rung_lanes[bad] = self._n_pad(s_b, Lb) ** 2
+            lanes += rung_lanes[bad]
+            resweeps += 1
+
+        eval_idx = sorted(evaluated)
+        eval_lad = tuple(lad[r] for r in eval_idx)
+        d2s = np.full((len(eval_idx), n0), np.inf)
+        for row, r in enumerate(eval_idx):
+            n_r = L - lad[r] + 1
+            d2s[row, :n_r] = evaluated[r][0][:n_r]
+        pan = self._pan_finish(
+            x, eval_lad, d2s, lanes=lanes, cells=cells, Lb=Lb, ndev=1,
+            method=f"pan_lb[{self.backend}]",
+            rung_calls=[rung_lanes[r] for r in eval_idx],
+            rung_indices=eval_idx, ladder=lad,
+            calls=lanes + refine_calls,
+            extra={"schedule": "lb_abandon",
+                   "evaluated_rungs": eval_lad,
+                   "skipped_rungs": tuple(lad[r] for r in skipped),
+                   "resweeps": resweeps,
+                   "refine_calls": refine_calls,
+                   "ladder_lanes": pan_lanes(lad, n_pad, n_pad),
+                   "independent_lanes":
+                       self._independent_lanes(lad, Lb)})
+        self.stats.searches += 1
+        self.stats.tile_lanes += lanes
+        return self._stamp_pan_runtime(pan, time.perf_counter() - t0)
 
     def _independent_lanes(self, ladder: tuple, Lb: int) -> int:
         """What ``len(ladder)`` independent per-length profile sweeps
         of the same bucket would cost — the pan sweep's baseline."""
         return sum(self._n_pad(s, Lb) ** 2 for s in ladder)
 
-    def search_batched(self, series_batch) -> List[DiscordResult]:
+    def search_batched(self, series_batch
+                       ) -> Union[List[DiscordResult], List[PanResult]]:
         """Top-k discords of every series in a (B, L) stack — one
         plan-cached sweep (vmapped on ``xla``, scanned elsewhere).
+
+        Multi-window specs run the (B, ladder) pan plan instead and
+        return one :class:`PanResult` per series (docs/pan.md).
 
         Sharded sessions route through a two-level layout: the batch
         is series-parallel across the mesh devices (each device sweeps
@@ -755,15 +1203,15 @@ class DiscordEngine:
         """
         spec = self.spec
         self._require_profile_plan("search_batched")
-        if spec.multi_window:
-            raise ValueError("search_batched needs a scalar-s spec")
-        s = spec.s
         t0 = time.perf_counter()
         xb = np.atleast_2d(np.asarray(series_batch, np.float64))
         B, L = xb.shape
+        if spec.multi_window:
+            return self._search_pan_batched(xb, t0)
+        s = spec.s
         if L < s + 1:
             raise ValueError(f"series of {L} points is too short for "
-                             f"window s={s}")
+                             f"window spec.s={s}")
         if self.sharded:
             return self._search_batched_sharded(xb, t0)
         n_true = L - s + 1
@@ -851,6 +1299,77 @@ class DiscordEngine:
                        "tile_lanes": lanes}))
         return out
 
+    def _search_pan_batched(self, xb: np.ndarray, t0: float
+                            ) -> List[PanResult]:
+        """Batched pan (the (B, ladder) plan): every series of the
+        stack through one ladder sweep — ``("pan_batched", ...)``
+        locally, the two-level layout on a mesh (series-parallel
+        below :func:`ring_series_threshold` base-rung windows,
+        query-block-sharded pan per series above; no znorm guard —
+        the pan body computes raw distances natively)."""
+        spec = self.spec
+        lad = canonical_ladder(spec.windows)
+        B, L = xb.shape
+        if L < lad[-1] + 1:
+            raise ValueError(f"series of {L} points is too short for "
+                             f"the ladder's longest window {lad[-1]} "
+                             f"(spec.s={spec.s})")
+        n0 = L - lad[0] + 1
+        Lb = length_bucket(L)
+        s0 = lad[0]
+        if self.sharded and n0 > ring_series_threshold():
+            # level 2: each series is itself a query-block-sharded pan
+            out = [self.search_pan(xb[b]) for b in range(B)]
+            elapsed = time.perf_counter() - t0
+            total = sum(p.tile_lanes for p in out)
+            # one API call = one search, like the other batched layouts
+            self.stats.searches -= B - 1
+            for b, p in enumerate(out):
+                self._stamp_pan_runtime(p, elapsed)
+                p.extra.update(batch_size=B, batch_index=b,
+                               layout="pan-ring-per-series",
+                               per_series_s=elapsed / B,
+                               batch_tile_lanes=total)
+            return out
+        ndev = self.ndev if self.sharded else 1
+        n_pad = self._n_pad(s0, Lb)
+        if self.sharded:
+            Bp = ceil_div(B, ndev) * ndev
+            xbp = np.zeros((Bp, Lb), np.float32)
+            xbp[:B, :L] = xb
+            d2b, _argb = self._pan_batched_sharded_plan(lad, Bp, Lb)(
+                jnp.asarray(xbp), jnp.full((1,), n0, jnp.int32))
+            layout = "series-parallel"
+            n_swept = Bp
+        else:
+            xbp = np.zeros((B, Lb), np.float32)
+            xbp[:, :L] = xb
+            d2b, _argb = self._pan_batched_plan(lad, B, Lb)(
+                jnp.asarray(xbp), np.int32(n0))
+            layout = "local"
+            n_swept = B
+        d2b = np.asarray(d2b, np.float64)
+        per_lanes = pan_lanes(lad, n_pad, n_pad)
+        total = n_swept * per_lanes
+        self.stats.searches += 1
+        self.stats.tile_lanes += total
+        elapsed = time.perf_counter() - t0
+        method = (f"pan_batched[{self.backend}]" if ndev == 1 else
+                  f"pan_batched[{ndev}dev|{self.backend}]")
+        out: List[PanResult] = []
+        for b in range(B):
+            pan = self._pan_finish(
+                xb[b], lad, d2b[b], lanes=per_lanes,
+                cells=n_pad * n_pad, Lb=Lb, ndev=ndev, method=method,
+                extra={"batch_size": B, "batch_index": b,
+                       "layout": layout, "per_series_s": elapsed / B,
+                       "batch_tile_lanes": total,
+                       "independent_lanes":
+                           self._independent_lanes(lad, Lb),
+                       "schedule": "ladder"})
+            out.append(self._stamp_pan_runtime(pan, elapsed))
+        return out
+
     # -- streaming -----------------------------------------------------
     def _require_profile_plan(self, op: str) -> None:
         """Batched/stream entry points run the exact-profile plan
@@ -859,34 +1378,48 @@ class DiscordEngine:
         plane)."""
         if self.spec.method not in ("matrix_profile", "ring"):
             raise ValueError(
-                f"{op} runs the exact-profile plan family and needs "
-                f"method='matrix_profile' (local) or 'ring' "
-                f"(mesh-sharded); got method={self.spec.method!r}")
+                f"{op} runs the exact-profile plan family and "
+                "supports spec.method='matrix_profile' (local "
+                "sessions) or 'ring' (mesh-sharded) — scalar and "
+                "multi-window (pan ladder) specs alike; got "
+                f"spec.method={self.spec.method!r}.  The serial "
+                "counted methods, hst_jax and drag run one-shot "
+                "single-series searches through search() only.")
 
     def _require_znorm(self, what: str) -> None:
-        """The sharded plans feed Eq. (3) tiles straight through the
-        ring/min-fold bodies with no raw-mode (``znorm=False``)
-        inversion — the uninverted tile is not a monotone transform of
-        raw distance, so allowing it would silently return wrong
-        neighbors.  Raw sharded work must route through the
-        series-parallel/local profile paths instead (they apply
-        ``TileEngine._raw_d2``)."""
+        """The sharded single-length plans feed Eq. (3) tiles straight
+        through the ring/min-fold bodies with no raw-mode
+        (``znorm=False``) inversion — the uninverted tile is not a
+        monotone transform of raw distance, so allowing it would
+        silently return wrong neighbors.  Raw sharded work must route
+        through the series-parallel/local profile plans (they apply
+        ``TileEngine._raw_d2``) or the pan plans (which compute raw
+        distances natively from the carried QT and need no guard)."""
         if not self.spec.znorm:
             raise ValueError(
-                f"{what} speaks Eq. (3) z-normalized distance only; "
-                "znorm=False (raw Euclidean) runs on the local or "
-                "series-parallel profile plans")
+                f"{what} speaks Eq. (3) z-normalized distance only "
+                "and rejects spec.znorm=False; raw (Euclidean) "
+                "searches run on the local or series-parallel profile "
+                "plans, and raw ladder searches on the pan plans")
 
     def open_stream(self, s: Optional[int] = None, *,
-                    history=None) -> "DiscordStream":
-        """Open an append-only profile stream at window length ``s``
-        (defaults to the spec's scalar ``s``), optionally seeded with
-        ``history`` points."""
+                    history=None
+                    ) -> Union["DiscordStream", "PanStream"]:
+        """Open an append-only profile stream, optionally seeded with
+        ``history`` points.
+
+        On a scalar-``s`` spec (or with an explicit ``s=``) this is a
+        single-length :class:`DiscordStream`.  On a multi-window spec
+        with ``s=None`` it is a :class:`PanStream` that maintains
+        *every* ladder rung's exact profile incrementally — appends
+        sweep only the tail rows, QT carried across rungs
+        (docs/pan.md).
+        """
         self._require_profile_plan("open_stream")
         if s is None:
             if self.spec.multi_window:
-                raise ValueError("multi-window spec: pass s= "
-                                 "explicitly to open_stream")
+                return PanStream(self, self.spec.windows,
+                                 history=history)
             s = self.spec.s
         return DiscordStream(self, int(s), history=history)
 
@@ -1062,3 +1595,178 @@ class DiscordStream:
             extra={"appends": self.appends,
                    "tile_lanes": self.tile_lanes,
                    "backend": self.engine.backend})
+
+
+class PanStream:
+    """Append-only series with **every ladder rung's** exact nnd
+    profile maintained incrementally (opened via
+    :meth:`DiscordEngine.open_stream` on a multi-window spec; user
+    guide in docs/pan.md).
+
+    The first fill (once the series covers the longest rung) runs the
+    session's full pan ladder plan.  Every later ``append`` runs a
+    ``("pan_tail", ...)`` plan: the tail's base-rung query rows span
+    every rung's new windows (rung ``r``'s new windows start
+    ``s_r - s_0`` ids *before* the base rung's), the QT is carried
+    across rungs exactly like the full sweep — so an append pays
+    base-rung tail tiles plus Δ-wide extensions only — and per rung
+    the row minima become the new windows' exact nnds while the column
+    minima min-fold new-neighbor improvements into the old profile
+    (append-only: an old window's nnd can only be superseded, never
+    worsen).
+
+    On a sharded engine the fill shards the ladder's query blocks and
+    each append shards the *candidates* (``("pan_tail_ring", ...)``).
+    Both znorm modes run sharded — the pan bodies compute raw
+    distances natively from the carried QT, so no raw-mode guard is
+    needed (unlike the single-length sharded tail plan).
+    """
+
+    def __init__(self, engine: DiscordEngine, ladder, history=None):
+        self.engine = engine
+        self.ladder = canonical_ladder(ladder)
+        self._sharded = engine.sharded
+        self._x = np.zeros(0, np.float64)
+        self._d2 = [np.zeros(0, np.float64) for _ in self.ladder]
+        self._ngh = [np.zeros(0, np.int64) for _ in self.ladder]
+        self._filled = False
+        self.appends = 0
+        self.tile_lanes = 0
+        self._cells = 0            # swept (rows x cols) grid cells
+        # per-rung width-normalized shares, accumulated per sweep so
+        # they always sum to tile_lanes exactly (pan.pan_rung_shares;
+        # re-deriving shares from the cell total would ceil-drift)
+        self._rung_lanes = [0] * len(self.ladder)
+        if history is not None and np.asarray(history).size:
+            self.append(history)
+
+    # -- state ---------------------------------------------------------
+    @property
+    def n_points(self) -> int:
+        return int(self._x.shape[0])
+
+    def n_windows(self, rung: int = 0) -> int:
+        return int(self._d2[rung].shape[0])
+
+    @property
+    def series(self) -> np.ndarray:
+        return self._x.copy()
+
+    def profile(self, rung: int = 0) -> np.ndarray:
+        """Exact nnd per window at one rung (+inf where no non-self
+        match exists)."""
+        return np.sqrt(np.maximum(self._d2[rung], 0.0))
+
+    def profiles(self) -> List[np.ndarray]:
+        """Every rung's exact nnd profile, ascending ``s``."""
+        return [self.profile(r) for r in range(len(self.ladder))]
+
+    def neighbors(self, rung: int = 0) -> np.ndarray:
+        return self._ngh[rung].copy()
+
+    # -- updates -------------------------------------------------------
+    def append(self, points) -> "PanStream":
+        """Fold new points into every rung's profile, sweeping only
+        the tail (one carried-QT pass for the whole ladder)."""
+        pts = np.asarray(points, np.float64).ravel()
+        if pts.size == 0:
+            return self
+        eng, lad = self.engine, self.ladder
+        s0, smax = lad[0], lad[-1]
+        n_old = max(0, self._x.shape[0] - s0 + 1)   # base rung
+        self._x = np.concatenate([self._x, pts])
+        L = self._x.shape[0]
+        n_new = L - s0 + 1
+        if L < smax + 1:              # longest rung doesn't fit yet
+            return self
+        Lb = length_bucket(L)
+        xp = np.zeros(Lb, np.float32)
+        xp[:L] = self._x
+        ndev = eng.ndev if self._sharded else 1
+        if not self._filled:          # first fill: one full ladder plan
+            if self._sharded:
+                plan = eng._pan_sharded_plan(lad, Lb)
+                n_pad, nb_p = eng._pan_row_geom(lad, Lb, ndev)
+                n_rows = nb_p * eng.spec.block
+            else:
+                plan = eng._pan_plan(lad, Lb)
+                n_rows = n_pad = eng._n_pad(s0, Lb)
+            d2s, args = plan(jnp.asarray(xp), np.int32(n_new))
+            d2s = np.asarray(d2s, np.float64)
+            args = np.asarray(args, np.int64)
+            for r, s_r in enumerate(lad):
+                n_r = L - s_r + 1
+                self._d2[r] = d2s[r, :n_r].copy()
+                self._ngh[r] = args[r, :n_r].copy()
+            shares = pan_rung_shares(lad, n_rows, n_pad)
+            cells = n_rows * n_pad
+            self._filled = True
+        else:                         # pan tail sweep only
+            # the tail's base-rung query ids span every rung's new
+            # windows: rung r's start n_old - (s_r - s0) is smallest
+            # at the longest rung
+            q0 = max(0, n_old - (smax - s0))
+            Qb = length_bucket(n_new - q0, lo=32)
+            plan = (eng._pan_tail_sharded_plan(lad, Lb, Qb)
+                    if self._sharded
+                    else eng._pan_tail_plan(lad, Lb, Qb))
+            rd2, rng, cd2, cng = plan(jnp.asarray(xp), np.int32(q0),
+                                      np.int32(n_new))
+            rd2 = np.asarray(rd2, np.float64)
+            rng = np.asarray(rng, np.int64)
+            cd2 = np.asarray(cd2, np.float64)
+            cng = np.asarray(cng, np.int64)
+            for r, s_r in enumerate(lad):
+                n_r_old = self._d2[r].shape[0]
+                n_r = L - s_r + 1
+                # rows [n_r_old - q0, n_r - q0): this rung's new
+                # windows — their row minima are exact nnds
+                d2 = np.concatenate(
+                    [self._d2[r], rd2[r, n_r_old - q0:n_r - q0]])
+                ngh = np.concatenate(
+                    [self._ngh[r], rng[r, n_r_old - q0:n_r - q0]])
+                # columns: every old window's best distance *to the
+                # tail* min-folds in (append-only fold)
+                cm, ca = cd2[r, :n_r], cng[r, :n_r]
+                better = cm < d2
+                self._d2[r] = np.where(better, cm, d2)
+                self._ngh[r] = np.where(better, ca, ngh)
+            n_cols = (eng._shard_geom(s0, Lb, ndev)[2]
+                      if self._sharded else eng._n_pad(s0, Lb))
+            shares = pan_rung_shares(lad, Qb, n_cols)
+            cells = Qb * n_cols
+        lanes = sum(shares)
+        for r, share in enumerate(shares):
+            self._rung_lanes[r] += share
+        self.appends += 1
+        self.tile_lanes += lanes
+        self._cells += cells
+        eng.stats.appends += 1
+        eng.stats.tile_lanes += lanes
+        return self
+
+    # -- queries -------------------------------------------------------
+    def discords(self, k: Optional[int] = None) -> PanResult:
+        """Per-rung top-k plus the global ``d/sqrt(s)``-normalized
+        top-k of the current profiles (the same post-processing as
+        ``search_pan``, including the cross-length LB self-check)."""
+        eng, lad = self.engine, self.ladder
+        k = eng.spec.k if k is None else int(k)
+        method = f"pan_stream[{eng.backend}]"
+        if not self._filled:
+            return PanResult(per_rung=[], global_topk=[], ladder=lad,
+                             n=0, calls=0, tile_lanes=0, method=method)
+        t0 = time.perf_counter()
+        L = self._x.shape[0]
+        n0 = L - lad[0] + 1
+        d2s = np.full((len(lad), n0), np.inf)
+        for r in range(len(lad)):
+            d2s[r, :self._d2[r].shape[0]] = self._d2[r]
+        pan = eng._pan_finish(
+            self._x, lad, d2s, lanes=self.tile_lanes,
+            cells=self._cells, Lb=length_bucket(L),
+            ndev=eng.ndev if self._sharded else 1, method=method, k=k,
+            rung_calls=list(self._rung_lanes),
+            extra={"appends": self.appends, "schedule": "stream"})
+        return eng._stamp_pan_runtime(pan,
+                                      time.perf_counter() - t0)

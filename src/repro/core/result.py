@@ -64,11 +64,15 @@ class DiscordResult:
 class PanResult:
     """Outcome of a pan-length (window-ladder) discord search.
 
-    ``per_rung`` holds one :class:`DiscordResult` per ladder rung
-    (ascending ``s``) — each the exact equivalent of an independent
-    single-length search at that rung.  ``global_topk`` ranks discords
-    *across* rungs by the length-normalized distance ``d / sqrt(s)``
-    under interval-overlap exclusion (``core/pan.py``).
+    ``per_rung`` holds one :class:`DiscordResult` per *evaluated*
+    ladder rung (ascending ``s``) — each the exact equivalent of an
+    independent single-length search at that rung.  The all-rung
+    ``schedule="ladder"`` sweep evaluates every rung; the
+    LB-abandoning schedule may skip rungs that provably cannot reach
+    the global top-k (``extra["skipped_rungs"]``).  ``global_topk``
+    (alias :attr:`global_normalized_topk`) ranks discords *across*
+    rungs by the length-normalized distance ``d / sqrt(s)`` under
+    interval-overlap exclusion (``core/pan.py``).
 
     ``calls`` / ``tile_lanes`` are the sweep's width-normalized lanes
     (docs/cps.md) — the whole point: one ladder sweep, not ``R``
@@ -86,6 +90,13 @@ class PanResult:
     method: str = "pan"
     lb_margin: float = 0.0
     extra: dict = field(default_factory=dict)
+
+    @property
+    def global_normalized_topk(self) -> List[dict]:
+        """The global ``d / sqrt(s)``-normalized top-k across rungs —
+        the quantity the LB-abandoning rung schedule preserves
+        exactly.  Alias of ``global_topk``."""
+        return self.global_topk
 
     @property
     def cps(self) -> float:

@@ -11,7 +11,9 @@ length bucket share one compiled tile sweep.
 
 ``s`` may be a *tuple* of window lengths (multi-window search à la
 Linardi et al.'s variable-length matrix profile): the engine then runs
-one cached tile sweep per length and returns one result per length.
+the pan-length plan family (docs/pan.md) — one QT-carrying ladder
+sweep for all lengths, on every session plane (``search`` /
+``search_pan`` / ``search_batched`` / ``open_stream``).
 
 Method naming: the CLI historically said ``ring`` where the API said
 ``distributed``.  Both spell the canonical ``ring`` here; every
@@ -70,7 +72,9 @@ class SearchSpec:
     Fields
     ------
     s       window length, or a tuple of lengths for multi-window
-            search (multi-window requires ``method="matrix_profile"``)
+            (pan-ladder) search — one shared sweep serves every
+            length, incl. the batched and streaming planes
+            (multi-window requires ``method="matrix_profile"``)
     k       number of discords
     method  canonical algorithm name (aliases accepted, see
             :func:`canonical_method`)

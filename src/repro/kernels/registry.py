@@ -43,10 +43,15 @@ with no stats, masking or Eq. (3) arithmetic.  It exists for the
 pan-length plan family (``core/pan.py``), whose VALMOD-style
 incremental sweep carries the QT inner products across window lengths
 and therefore needs bare scalar products at arbitrary widths (the full
-base width once, then each ladder step's small extension).  Register
-with ``@register_dot_backend("name")``; a backend without a registered
-dot tile falls back to the ``xla`` implementation (exact — it is the
-same contraction, just not hand-placed).
+base width once, then each ladder step's small extension).  Every pan
+sweep shape rides it: the full ladder plans, the ``PanStream`` tail
+plans (one tail row block against candidate slabs — no masked variant
+needed, the exclusion/validity mask is applied downstream on the
+carried-QT distances), the LB-abandoning schedule's base/step plans,
+and the batched (B, ladder) plans.  Register with
+``@register_dot_backend("name")``; a backend without a registered dot
+tile falls back to the ``xla`` implementation (exact — it is the same
+contraction, just not hand-placed).
 """
 from __future__ import annotations
 

@@ -13,9 +13,18 @@ Backend auto-resolution when ``--backend`` is omitted follows the
 registry order: ``REPRO_TILE_BACKEND`` env var if set, else ``pallas``
 on TPU and ``xla`` everywhere else (resolved once per session).
 
+Entry-point flags compose with the window spelling: ``--stream P``
+drives the session's stream plane (appends sweep only the tail) and
+``--batch B`` the batched plane — with a ladder ``--s`` both run the
+pan plans (PanStream / the (B, ladder) plan, docs/pan.md), and
+``--schedule lb`` runs the LB-abandoning rung schedule when only the
+global top-k matters.
+
     python -m repro.launch.discord --method hst --n 20000 --s 120 -k 3
     python -m repro.launch.discord --method ring --ndev 4 --backend xla
     python -m repro.launch.discord --method matrix_profile --s 96,128
+    python -m repro.launch.discord --method mp --s 64:128:16 --stream 4096
+    python -m repro.launch.discord --method mp --s 64:128:16 --batch 8
 """
 from __future__ import annotations
 
@@ -23,9 +32,9 @@ import argparse
 
 import numpy as np
 
-from repro.core import DiscordEngine, SearchSpec
+from repro.core import DiscordEngine, PanResult, SearchSpec
 from repro.core.spec import (JAX_METHODS, METHOD_ALIASES,
-                             SERIAL_METHODS)
+                             SERIAL_METHODS, canonical_method)
 from repro.data import sine_noise, with_implanted_anomalies
 from repro.kernels.registry import ENV_VAR as BACKEND_ENV_VAR
 from repro.kernels.registry import _ALIASES as _BACKEND_ALIASES
@@ -80,7 +89,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "lo:hi:step ladder (64:128:16, hi inclusive) "
                          "runs the pan-length matrix_profile search — "
                          "every rung from one shared sweep, plus the "
-                         "global d/sqrt(s)-normalized top-k")
+                         "global d/sqrt(s)-normalized top-k.  "
+                         "Composes with --stream (PanStream: appends "
+                         "sweep only the tail at every rung), --batch "
+                         "(the (B, ladder) plan) and --schedule")
     ap.add_argument("-k", type=int, default=1)
     ap.add_argument("--P", type=int, default=4)
     ap.add_argument("--alpha", type=int, default=4)
@@ -102,7 +114,62 @@ def build_parser() -> argparse.ArgumentParser:
                     help="raw Euclidean windows instead of Eq. (3) "
                          "z-normalized (DADD's convention; only "
                          "brute | hst | matrix_profile)")
+    ap.add_argument("--stream", type=int, default=None, metavar="P",
+                    help="drive the stream plane: hold out the last P "
+                         "points, open_stream on the rest, append "
+                         "them, print the stream's discords.  Scalar "
+                         "--s streams one profile; a ladder --s "
+                         "streams every rung through the pan tail "
+                         "plan (profile-plan methods only)")
+    ap.add_argument("--batch", type=int, default=None, metavar="B",
+                    help="drive the batched plane: search B synthetic "
+                         "series (seeds seed..seed+B-1) in one "
+                         "search_batched call.  Scalar --s runs the "
+                         "batched profile plan; a ladder --s the "
+                         "(B, ladder) pan plan (profile-plan methods "
+                         "only; not with --file/--stream)")
+    ap.add_argument("--schedule", default="ladder",
+                    choices=("ladder", "lb", "lb_abandon"),
+                    help="ladder --s only: 'ladder' sweeps every rung "
+                         "in one plan (per-rung results); 'lb' / "
+                         "'lb_abandon' sweeps rungs sequentially and "
+                         "skips rungs the cross-length bracket rules "
+                         "out — same global top-k, fewer lanes (one-"
+                         "shot local search only)")
     return ap
+
+
+def validate_args(ap: argparse.ArgumentParser,
+                  args: argparse.Namespace) -> argparse.Namespace:
+    """Cross-flag rules the type system can't express — fail loudly at
+    the parser, naming the flags, before any jax work starts."""
+    profile_plan = canonical_method(args.method) in ("matrix_profile",
+                                                     "ring")
+    if args.stream is not None and args.batch is not None:
+        ap.error("--stream and --batch are different session planes; "
+                 "pick one")
+    if (args.stream is not None or args.batch is not None) \
+            and not profile_plan:
+        ap.error(f"--stream/--batch run the exact-profile plan family "
+                 f"(--method matrix_profile|scamp|mp or ring|"
+                 f"distributed); --method {args.method} searches "
+                 "one-shot only")
+    if args.batch is not None and args.batch < 1:
+        ap.error("--batch must be >= 1")
+    if args.stream is not None and args.stream < 1:
+        ap.error("--stream must hold out >= 1 points")
+    if args.batch is not None and args.file:
+        ap.error("--batch generates synthetic series; it does not "
+                 "compose with --file")
+    if args.schedule != "ladder":
+        if isinstance(args.s, int):
+            ap.error("--schedule lb needs a window ladder "
+                     "(--s lo:hi:step or a comma list)")
+        if args.stream is not None or args.batch is not None:
+            ap.error("--schedule lb is a one-shot search_pan "
+                     "schedule; it does not compose with "
+                     "--stream/--batch")
+    return args
 
 
 def spec_from_args(args: argparse.Namespace) -> SearchSpec:
@@ -113,8 +180,25 @@ def spec_from_args(args: argparse.Namespace) -> SearchSpec:
                       backend=args.backend, ndev=args.ndev)
 
 
+def _print_pan(pan: PanResult) -> None:
+    for r in pan.per_rung:
+        print(r)
+    skips = (f", skipped rungs {pan.extra['skipped_rungs']} "
+             f"(all-rung sweep: {pan.extra['ladder_lanes']} lanes)"
+             if pan.extra.get("schedule") == "lb_abandon" else "")
+    indep = pan.extra.get("independent_lanes")
+    baseline = (f" (independent sweeps would cost {indep})"
+                if indep else "")
+    print(f"pan ladder {pan.ladder}: tile_lanes={pan.tile_lanes}"
+          f"{baseline}, lb_ok={pan.extra['lb_ok']}{skips}")
+    for g in pan.global_topk:
+        print(f"  global s={g['s']} pos={g['position']} "
+              f"nnd={g['nnd']:.4f} nnd/sqrt(s)={g['score']:.4f}")
+
+
 def main(argv=None):
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = validate_args(ap, ap.parse_args(argv))
 
     anchor = args.s if isinstance(args.s, int) else max(args.s)
     if args.file:
@@ -130,17 +214,39 @@ def main(argv=None):
     engine = DiscordEngine(spec)
     mesh = f", ndev={engine.ndev}" if engine.sharded else ""
     print(f"{spec} -> backend={engine.backend}{mesh}")
+    if args.batch is not None:
+        xb = np.stack([x] + [
+            with_implanted_anomalies(
+                sine_noise(x.shape[0], E=args.E, seed=args.seed + b),
+                n_anomalies=args.anomalies, length=anchor, amp=0.8,
+                seed=args.seed + b)[0]
+            for b in range(1, args.batch)])
+        results = engine.search_batched(xb)
+        for b, r in enumerate(results):
+            print(f"series {b}:")
+            if isinstance(r, PanResult):
+                _print_pan(r)
+            else:
+                print(r)
+        return
+    if args.stream is not None:
+        if args.stream >= x.shape[0]:
+            ap.error(f"--stream {args.stream} holds out the whole "
+                     f"{x.shape[0]}-point series; nothing to seed "
+                     "the stream with")
+        st = engine.open_stream(history=x[:-args.stream])
+        held = st.tile_lanes
+        st.append(x[-args.stream:])
+        print(f"stream: fill {held} lanes, append "
+              f"{st.tile_lanes - held} lanes ({st.appends} appends)")
+        res = st.discords()
+        if isinstance(res, PanResult):
+            _print_pan(res)
+        else:
+            print(res)
+        return
     if spec.multi_window:
-        pan = engine.search_pan(x)
-        for r in pan.per_rung:
-            print(r)
-        print(f"pan ladder {pan.ladder}: tile_lanes={pan.tile_lanes} "
-              f"(independent sweeps would cost "
-              f"{pan.extra['independent_lanes']}), lb_ok="
-              f"{pan.extra['lb_ok']}")
-        for g in pan.global_topk:
-            print(f"  global s={g['s']} pos={g['position']} "
-                  f"nnd={g['nnd']:.4f} nnd/sqrt(s)={g['score']:.4f}")
+        _print_pan(engine.search_pan(x, schedule=args.schedule))
     else:
         res = engine.search(x)
         for r in res if isinstance(res, list) else [res]:

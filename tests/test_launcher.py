@@ -119,6 +119,91 @@ def test_help_documents_every_alias_and_the_env_var():
     assert "pallas on TPU" in text
 
 
+def test_help_documents_ladder_stream_batch_interaction():
+    """--help must say how a ladder --s composes with the session
+    planes: --stream (pan tail), --batch ((B, ladder) plan) and
+    --schedule (LB-abandon)."""
+    text = build_parser().format_help()
+    assert "lo:hi:step" in text
+    for flag in ("--stream", "--batch", "--schedule"):
+        assert flag in text
+    assert "PanStream" in text                # ladder x stream
+    assert "(B, ladder)" in text              # ladder x batch
+    assert "lb_abandon" in text               # ladder x schedule
+    assert "global top-k" in text
+
+
+# ----------------------------------------------------------------------
+# stream/batch/schedule flag combinations (argv round-trip)
+# ----------------------------------------------------------------------
+def _args(argv):
+    from repro.launch.discord import validate_args
+    ap = build_parser()
+    return validate_args(ap, ap.parse_args(argv))
+
+
+def test_stream_batch_flags_round_trip():
+    a = _args(["--method", "mp", "--s", "64:128:16", "--stream", "512"])
+    assert a.stream == 512 and a.batch is None
+    assert spec_from_args(a).multi_window
+    b = _args(["--method", "ring", "--s", "96", "--batch", "4"])
+    assert b.batch == 4
+    c = _args(["--method", "mp", "--s", "64,96", "--schedule", "lb"])
+    assert c.schedule == "lb"
+    # spec building is unaffected by the entry-point flags
+    assert spec_from_args(b) == spec_from_args(
+        _args(["--method", "ring", "--s", "96"]))
+
+
+@pytest.mark.parametrize("argv", [
+    ["--method", "hst", "--s", "64", "--stream", "100"],   # serial
+    ["--method", "dadd", "--s", "64", "--batch", "2"],
+    ["--method", "mp", "--s", "64", "--stream", "10",
+     "--batch", "2"],                                      # both planes
+    ["--method", "mp", "--s", "64", "--schedule", "lb"],   # scalar lb
+    ["--method", "mp", "--s", "64:96:16", "--stream", "10",
+     "--schedule", "lb"],                                  # lb x stream
+    ["--method", "mp", "--s", "64", "--batch", "0"],
+])
+def test_invalid_plane_combinations_fail_at_the_parser(argv):
+    with pytest.raises(SystemExit):
+        _args(argv)
+
+
+def test_launcher_streams_a_ladder(capsys):
+    from repro.launch.discord import main
+    main(["--method", "mp", "--s", "16:32:8", "--n", "400",
+          "--stream", "80", "-k", "1"])
+    out = capsys.readouterr().out
+    assert "stream: fill" in out and "append" in out
+    assert "pan ladder (16, 24, 32)" in out and "global s=" in out
+
+
+def test_launcher_batches_a_ladder(capsys):
+    from repro.launch.discord import main
+    main(["--method", "mp", "--s", "16,24", "--n", "400",
+          "--batch", "2", "-k", "1"])
+    out = capsys.readouterr().out
+    assert "series 0:" in out and "series 1:" in out
+    assert out.count("pan ladder (16, 24)") == 2
+
+
+def test_launcher_lb_schedule(capsys):
+    from repro.launch.discord import main
+    main(["--method", "mp", "--s", "16:32:8", "--n", "400",
+          "--schedule", "lb", "-k", "1"])
+    out = capsys.readouterr().out
+    assert "skipped rungs" in out and "global s=" in out
+
+
+def test_launcher_streams_scalar_s(capsys):
+    from repro.launch.discord import main
+    main(["--method", "mp", "--s", "24", "--n", "400",
+          "--stream", "60", "-k", "1"])
+    out = capsys.readouterr().out
+    assert "stream: fill" in out and "stream[" in out
+
+
 # ----------------------------------------------------------------------
 # end-to-end smoke (tiny series, serial method: no jit in the loop)
 # ----------------------------------------------------------------------
