@@ -1,0 +1,24 @@
+"""Plan-integrity analyzer: AST lint, spec-key audit, pad sanitizer.
+
+Three passes over the engine + kernel layers (``python -m
+repro.analysis``; rule catalogue and report schema in
+docs/analysis.md):
+
+* ``lint`` — jax-free AST rules: tile-math containment, no host sync
+  in plan bodies, f32-only kernels, no untracked ``jax.jit``.
+* ``speckey`` — SearchSpec fields vs plan-cache keys: a static
+  cross-reference plus a property-based runtime perturbation check.
+* ``sanitize`` — NaN/±inf pad-lane canaries through every plan kind,
+  asserting bit-identical results vs benign padding.
+
+Importing this package (and running lint + the static speckey audit)
+must never initialize jax — the runtime halves (:func:`runtime_audit`,
+:mod:`.sanitize`) import it lazily inside their functions.
+"""
+from .lint import RULES, lint_source, run_lint
+from .report import Finding, REPORT_VERSION, report_dict, write_report
+from .speckey import coverage, runtime_audit, static_audit
+
+__all__ = ["Finding", "REPORT_VERSION", "report_dict", "write_report",
+           "RULES", "lint_source", "run_lint",
+           "static_audit", "runtime_audit", "coverage"]

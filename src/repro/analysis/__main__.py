@@ -1,0 +1,101 @@
+"""``python -m repro.analysis`` — exit-code-gated analyzer driver.
+
+Runs the requested passes, prints every finding, writes the JSON
+report artifact and exits non-zero on any finding (the CI ``analysis``
+job gates on this; schema in docs/analysis.md).
+
+``lint`` and ``speckey --static-only`` stay jax-free; ``sanitize``
+and the speckey runtime audit build real (tiny) engines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from .lint import run_lint
+from .report import Finding, print_findings, write_report
+from .speckey import coverage, static_audit
+
+PASSES = ("all", "lint", "speckey", "sanitize")
+
+
+def _parse_args(argv):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Plan-integrity analyzer (docs/analysis.md): AST "
+                    "lint, SearchSpec plan-key audit, padding-poison "
+                    "sanitizer.  Exits 1 on any finding.")
+    p.add_argument("passes", nargs="*", metavar="pass",
+                   help=f"passes to run, from {PASSES} "
+                        "(default: all)")
+    p.add_argument("--report", default="ANALYSIS_REPORT.json",
+                   metavar="PATH",
+                   help="JSON report artifact path (default: "
+                        "%(default)s; '-' disables)")
+    p.add_argument("--static-only", action="store_true",
+                   help="speckey: skip the runtime perturbation audit "
+                        "(keeps the pass jax-free)")
+    p.add_argument("--backends", default="numpy,xla,pallas",
+                   help="sanitize: comma-separated tile backends "
+                        "(default: %(default)s)")
+    p.add_argument("--znorm", default="both",
+                   choices=("both", "true", "false"),
+                   help="sanitize: distance modes to poison "
+                        "(default: both)")
+    p.add_argument("--kinds", default="all",
+                   help="sanitize: comma-separated plan kinds "
+                        "(default: all registered kinds)")
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(sys.argv[1:] if argv is None else argv)
+    bad = sorted(set(args.passes) - set(PASSES))
+    if bad:
+        print(f"unknown pass(es) {bad}; choose from {PASSES}",
+              file=sys.stderr)
+        return 2
+    want = set(args.passes or ["all"])
+    if "all" in want:
+        want = {"lint", "speckey", "sanitize"}
+    findings: List[Finding] = []
+    meta: dict = {"passes": sorted(want)}
+
+    if "lint" in want:
+        findings.extend(run_lint())
+    if "speckey" in want:
+        findings.extend(static_audit())
+        meta["speckey_coverage"] = coverage()
+        if not args.static_only:
+            from .speckey import runtime_audit
+            findings.extend(runtime_audit())
+    if "sanitize" in want:
+        from .sanitize import ALL_KINDS, run_sanitizer
+        kinds = (ALL_KINDS if args.kinds == "all"
+                 else tuple(k for k in args.kinds.split(",") if k))
+        znorms = {"both": (True, False), "true": (True,),
+                  "false": (False,)}[args.znorm]
+        backends = tuple(b for b in args.backends.split(",") if b)
+        sfind, checked = run_sanitizer(backends=backends,
+                                       znorms=znorms, kinds=kinds)
+        findings.extend(sfind)
+        meta["sanitize_checked"] = checked
+
+    if args.report != "-":
+        write_report(args.report, findings, meta)
+        meta_note = f" (report: {args.report})"
+    else:
+        meta_note = ""
+    if findings:
+        print_findings(findings)
+        print(f"repro.analysis: {len(findings)} finding(s) across "
+              f"{'/'.join(sorted(want))}{meta_note}", file=sys.stderr)
+        return 1
+    print(f"repro.analysis: OK — {'/'.join(sorted(want))} passed"
+          f"{meta_note}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Findings + JSON report for the plan-integrity analyzer.
+
+One small value type (:class:`Finding`) is shared by every pass (lint,
+speckey, sanitize) so ``python -m repro.analysis`` can gate its exit
+code on a single list and serialize one ``ANALYSIS_REPORT.json``
+artifact (docs/analysis.md has the schema).
+
+Deliberately dependency-free (stdlib only): the lint and static
+speckey passes must run on a CPU-only box without initializing jax.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["Finding", "report_dict", "write_report", "REPORT_VERSION"]
+
+REPORT_VERSION = 1
+
+
+@dataclass
+class Finding:
+    """One analyzer finding (any pass)."""
+    pass_name: str      # "lint" | "speckey" | "sanitize"
+    rule: str           # rule / check identifier (kebab-case)
+    path: str           # file (lint/speckey) or plan-kind locus (sanitize)
+    line: int           # 1-based source line; 0 when not applicable
+    message: str
+
+    def __str__(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.pass_name}/{self.rule}] {self.message}"
+
+
+def report_dict(findings: Sequence[Finding],
+                meta: Optional[Dict] = None) -> Dict:
+    """The report document: stable schema, ok == no findings."""
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.pass_name] = counts.get(f.pass_name, 0) + 1
+    return {
+        "version": REPORT_VERSION,
+        "tool": "repro.analysis",
+        "ok": not findings,
+        "counts": counts,
+        "findings": [asdict(f) for f in findings],
+        "meta": meta or {},
+    }
+
+
+def write_report(path: str, findings: Sequence[Finding],
+                 meta: Optional[Dict] = None) -> Dict:
+    """Serialize the report to ``path``; returns the document."""
+    doc = report_dict(findings, meta)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return doc
+
+
+def print_findings(findings: Sequence[Finding]) -> None:
+    for f in findings:
+        print(str(f))

@@ -214,6 +214,10 @@ def drag_discords(series, s: int, k: int = 1, *, r: Optional[float] = None,
     while True:
         body = functools.partial(_drag_shard, r=float(r), s=s, n=n,
                                  ndev=ndev, backend=backend)
+        # DRAG's data-dependent retry regeometries (r shrinks until
+        # the alive set fits) — the shard body is a new closure each
+        # round, so no engine plan cache can hold it.
+        # analysis: ignore[untracked-jit]
         f = jax.jit(shard_map(
             body, mesh=mesh,
             in_specs=(P(AXIS, None), P(AXIS), P(AXIS), P(AXIS)),

@@ -98,11 +98,45 @@ from .pan import (PanEngine, canonical_ladder, cross_length_ub,
                   pan_rung_shares)
 from .result import DiscordResult, PanResult
 from .spec import SearchSpec, length_bucket
-from .tiles import TileEngine, topk_nonoverlapping
+from .tiles import TileEngine, exact_pair_d2, topk_nonoverlapping
 from .windows import sliding_stats
 
 __all__ = ["DiscordEngine", "DiscordStream", "PanStream", "EngineStats",
-           "ring_series_threshold"]
+           "ring_series_threshold", "PLAN_KEY_FIELDS",
+           "KIND_DISPATCH_FIELDS", "TRACE_INVARIANT_FIELDS"]
+
+# -- SearchSpec keying contract (audited by repro.analysis.speckey) ----
+#: spec fields that reach every plan-cache key: ``backend``/``znorm``/
+#: ``block`` through the ``_plan_key`` prefix, ``s`` through each
+#: kind's own key element, ``ndev`` through the mesh-shape element of
+#: the sharded kinds
+PLAN_KEY_FIELDS = ("s", "backend", "znorm", "block", "ndev")
+#: spec fields that select *which* plan kind runs — the kind string
+#: leading every key carries them
+KIND_DISPATCH_FIELDS = ("method",)
+#: host-side fields no plan body ever closes over; perturbing them
+#: must mint zero new plans (speckey.runtime_audit asserts this)
+TRACE_INVARIANT_FIELDS = ("k", "P", "alpha", "seed", "r")
+
+#: host-side fill of the length-bucket padding.  Results never depend
+#: on it — every padded lane's id is masked to -1 downstream — and
+#: repro.analysis.sanitize proves that by swapping in NaN/±inf
+#: canaries and asserting bit-identical top-k.
+PAD_FILL = 0.0
+
+
+def _bucket_pad(x, Lb: int, rows: Optional[int] = None) -> np.ndarray:
+    """Bucket-pad a series (or a (B, L) stack, optionally to ``rows``
+    rows) to ``Lb`` columns of f32, filling the pad with PAD_FILL."""
+    x = np.asarray(x)
+    if x.ndim == 1:
+        xp = np.full(Lb, PAD_FILL, np.float32)
+        xp[:x.shape[0]] = x
+        return xp
+    xp = np.full((x.shape[0] if rows is None else rows, Lb),
+                 PAD_FILL, np.float32)
+    xp[:x.shape[0], :x.shape[1]] = x
+    return xp
 
 
 def ring_series_threshold() -> int:
@@ -220,7 +254,18 @@ class DiscordEngine:
         """Padded window count of bucket ``Lb`` (tile geometry)."""
         return ceil_div(Lb - s + 1, self.spec.block) * self.spec.block
 
+    def _plan_key(self, key):
+        """Full cache key of a plan: the session-invariant spec prefix
+        (``backend``/``znorm``/``block`` — everything a compiled tile
+        sweep closes over besides the per-kind geometry) + the kind's
+        own key.  The prefix is what lets a future shared cross-tenant
+        cache merge engine caches without collisions; the speckey
+        audit (docs/analysis.md) checks it stays complete."""
+        return (self.backend, self.spec.znorm, self.spec.block) \
+            + tuple(key)
+
     def _get_plan(self, key, build):
+        key = self._plan_key(key)
         fn = self._plans.get(key)
         if fn is None:
             fn = self._plans[key] = jax.jit(build())
@@ -757,8 +802,7 @@ class DiscordEngine:
                              f"s + 1 points)")
         n_true = L - s + 1
         Lb = length_bucket(L)
-        xp = np.zeros(Lb, np.float32)
-        xp[:L] = x
+        xp = _bucket_pad(x, Lb)
         d2, _arg = self._profile_plan(s, Lb)(jnp.asarray(xp),
                                              np.int32(n_true))
         prof = np.sqrt(np.asarray(d2, np.float64)[:n_true])
@@ -797,8 +841,7 @@ class DiscordEngine:
                              f"s + 1 points)")
         n_true = L - s + 1
         Lb = length_bucket(L)
-        xp = np.zeros(Lb, np.float32)
-        xp[:L] = x
+        xp = _bucket_pad(x, Lb)
         d2, arg, lanes, ndev = self._ring_exec(s, Lb, jnp.asarray(xp),
                                                np.int32(n_true))
         prof = np.sqrt(np.asarray(d2, np.float64)[:n_true])
@@ -947,8 +990,7 @@ class DiscordEngine:
         s0 = lad[0]
         n0 = L - s0 + 1
         Lb = length_bucket(L)
-        xp = np.zeros(Lb, np.float32)
-        xp[:L] = x
+        xp = _bucket_pad(x, Lb)
         ndev = self.ndev if self.sharded else 1
         if self.sharded:
             plan = self._pan_sharded_plan(lad, Lb)
@@ -1013,7 +1055,7 @@ class DiscordEngine:
             mu, sig = self._rung_stats(x, stats_cache, s_n)
             a = (a - mu[ii][:, None]) / sig[ii][:, None]
             b = (b - mu[jj][:, None]) / sig[jj][:, None]
-        return np.sum((a - b) ** 2, axis=1)
+        return exact_pair_d2(a, b)
 
     def _rung_skippable(self, x, lad, r: int, le: int, evaluated: dict,
                         stats_cache: dict, picks: List[dict], k: int):
@@ -1086,8 +1128,7 @@ class DiscordEngine:
         spec = self.spec
         L = x.shape[0]
         Lb = length_bucket(L)
-        xp = np.zeros(Lb, np.float32)
-        xp[:L] = x
+        xp = _bucket_pad(x, Lb)
         xp = jnp.asarray(xp)
         n0 = L - lad[0] + 1
         n_pad = self._n_pad(lad[0], Lb)
@@ -1216,8 +1257,7 @@ class DiscordEngine:
             return self._search_batched_sharded(xb, t0)
         n_true = L - s + 1
         Lb = length_bucket(L)
-        xbp = np.zeros((B, Lb), np.float32)
-        xbp[:, :L] = xb
+        xbp = _bucket_pad(xb, Lb)
         d2b, _argb = self._batched_plan(s, B, Lb)(jnp.asarray(xbp),
                                                   np.int32(n_true))
         profs = np.sqrt(np.asarray(d2b, np.float64)[:, :n_true])
@@ -1273,8 +1313,7 @@ class DiscordEngine:
         # level 1: series-parallel — pad the batch to a device multiple
         Lb = length_bucket(L)
         Bp = ceil_div(B, ndev) * ndev
-        xbp = np.zeros((Bp, Lb), np.float32)
-        xbp[:B, :L] = xb
+        xbp = _bucket_pad(xb, Lb, rows=Bp)
         d2b, _argb = self._batched_sharded_plan(s, Bp, Lb)(
             jnp.asarray(xbp), jnp.full((1,), n_true, jnp.int32))
         profs = np.sqrt(np.asarray(d2b, np.float64)[:B, :n_true])
@@ -1335,15 +1374,13 @@ class DiscordEngine:
         n_pad = self._n_pad(s0, Lb)
         if self.sharded:
             Bp = ceil_div(B, ndev) * ndev
-            xbp = np.zeros((Bp, Lb), np.float32)
-            xbp[:B, :L] = xb
+            xbp = _bucket_pad(xb, Lb, rows=Bp)
             d2b, _argb = self._pan_batched_sharded_plan(lad, Bp, Lb)(
                 jnp.asarray(xbp), jnp.full((1,), n0, jnp.int32))
             layout = "series-parallel"
             n_swept = Bp
         else:
-            xbp = np.zeros((B, Lb), np.float32)
-            xbp[:, :L] = xb
+            xbp = _bucket_pad(xb, Lb)
             d2b, _argb = self._pan_batched_plan(lad, B, Lb)(
                 jnp.asarray(xbp), np.int32(n0))
             layout = "local"
@@ -1536,8 +1573,7 @@ class DiscordStream:
         if n_new == n_old:            # still shorter than one window
             return self
         Lb = length_bucket(L)
-        xp = np.zeros(Lb, np.float32)
-        xp[:L] = self._x
+        xp = _bucket_pad(self._x, Lb)
         ndev = eng.ndev if self._sharded else 1
         if n_old == 0:                # first fill: one full-profile plan
             if self._sharded:
@@ -1680,8 +1716,7 @@ class PanStream:
         if L < smax + 1:              # longest rung doesn't fit yet
             return self
         Lb = length_bucket(L)
-        xp = np.zeros(Lb, np.float32)
-        xp[:L] = self._x
+        xp = _bucket_pad(self._x, Lb)
         ndev = eng.ndev if self._sharded else 1
         if not self._filled:          # first fill: one full ladder plan
             if self._sharded:

@@ -238,6 +238,9 @@ def _make_verify(eng: TileEngine):
 # ----------------------------------------------------------------------
 # driver
 # ----------------------------------------------------------------------
+# standalone one-shot plane: hst_jax predates the session layer and is
+# callable without an engine, so jax's own cache (keyed on the static
+# args) is its plan cache.  # analysis: ignore[untracked-jit]
 @functools.partial(jax.jit,
                    static_argnames=("s", "k", "P", "alpha", "block",
                                     "batch", "use_long_range", "backend"))

@@ -25,6 +25,9 @@ from .result import DiscordResult
 from .tiles import TileEngine, resolve_backend, topk_nonoverlapping
 
 
+# standalone one-shot baseline kept session-free on purpose (the
+# engine's bucketed ("profile", ...) plan is the cached path); jax's
+# own cache keys this per static tuple.  # analysis: ignore[untracked-jit]
 @functools.partial(jax.jit,
                    static_argnames=("s", "block", "backend", "interpret"))
 def _mp_jit(series, *, s, block, backend, interpret):

@@ -86,7 +86,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..kernels.common import (ceil_div, exclusion_mask, series_csums,
+from ..kernels.common import (ceil_div, exclusion_mask,
+                              raw_d2_from_dots, series_csums,
                               stats_from_csums, znorm_d2_formula)
 from ..kernels.registry import get_dot_backend, resolve_backend
 from .windows import sliding_stats
@@ -220,9 +221,8 @@ class PanEngine:
                                   self.mu[r][q_idx], self.sig[r][q_idx],
                                   self.mu[r][c_idx], self.sig[r][c_idx])
         else:
-            d2 = jnp.maximum(self.nrm[r][q_idx][:, None]
-                             + self.nrm[r][c_idx][None, :]
-                             - 2.0 * qt, 0.0)
+            d2 = raw_d2_from_dots(qt, self.nrm[r][q_idx],
+                                  self.nrm[r][c_idx])
         return jnp.where(exclusion_mask(qid, cid, s_r, nv), jnp.inf, d2)
 
     def rows(self, starts) -> Tuple[jnp.ndarray, jnp.ndarray]:

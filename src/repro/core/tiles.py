@@ -36,7 +36,7 @@ from ..kernels.registry import (available_backends, get_backend,
 
 __all__ = [
     "TileBlock", "TileMins", "TileEngine", "tile_d2", "tile_mins",
-    "pair_d2", "topk_nonoverlapping", "batched_profile",
+    "pair_d2", "exact_pair_d2", "topk_nonoverlapping", "batched_profile",
     "resolve_backend", "available_backends", "register_backend",
 ]
 
@@ -86,6 +86,17 @@ def pair_d2(wa, wb, mu_a, sig_a, mu_b, sig_b, s: int, valid=None):
     if valid is not None:
         d2 = jnp.where(valid, d2, jnp.inf)
     return d2
+
+
+def exact_pair_d2(wa, wb) -> np.ndarray:
+    """Row-wise exact (f64, host) squared distance of paired window
+    stacks — the tile plane's scalar-refinement sibling (used by the
+    LB-abandoning pan schedule).  Lives here so no caller has to spell
+    ``sum((a - b) ** 2)`` outside the tile layer (the ``tile-math``
+    lint rule, docs/analysis.md)."""
+    wa = np.asarray(wa, np.float64)
+    wb = np.asarray(wb, np.float64)
+    return np.sum((wa - wb) ** 2, axis=1)
 
 
 def topk_nonoverlapping(profile: np.ndarray, k: int, s: int
@@ -160,7 +171,14 @@ class TileEngine:
                 [jnp.zeros(1, jnp.float32),
                  jnp.cumsum(self.series_pad * self.series_pad)])
             self.nrm_pad = csum2[self.s:self.s + n_pad] - csum2[:n_pad]
-            mx = jnp.max(self.nrm_pad)
+            # the scale must only see live windows: pad windows overlap
+            # the bucket's pad samples (the sanitizer poisons those
+            # with NaN/±inf canaries), and one poisoned norm here
+            # would NaN the whole scaled series.  Value-identical
+            # under benign zero fill — every pad-window norm is a
+            # suffix sum of the last live window's.
+            live = jnp.arange(n_pad) < self.n_valid
+            mx = jnp.max(jnp.where(live, self.nrm_pad, 0.0))
             g = jnp.sqrt(jnp.float32(self.s)) / (
                 jnp.sqrt(jnp.maximum(mx, 1e-30)) * 1.001)
             self._g = jnp.where(mx > 0, g, 1.0)
@@ -181,8 +199,13 @@ class TileEngine:
 
         t = 2s - 2*g^2*<q,c> (masked lanes +inf) ->
         d2 = ||q||^2 + ||c||^2 - (2s - t)/g^2, clamped at 0.
+
+        Norm gathers stay inside the live range: masked lanes carry
+        id -1 (-> index 0, real data) and t=+inf already forces them
+        to +inf, so clipping to n_valid-1 never changes a value — it
+        just guarantees no pad-poisoned norm is ever even loaded.
         """
-        top = self.nrm_pad.shape[0] - 1
+        top = jnp.maximum(self.n_valid - 1, 0)
         nq = self.nrm_pad[jnp.clip(qids, 0, top)]
         nc = self.nrm_pad[jnp.clip(cids, 0, top)]
         dots2 = (2.0 * self.s - t) / (self._g * self._g)
@@ -300,6 +323,9 @@ class TileEngine:
 # ----------------------------------------------------------------------
 # batched multi-series plane
 # ----------------------------------------------------------------------
+# session-free serving front door: jax's own cache keys this jit per
+# (s, block, backend) tuple, there is no engine whose plan cache could
+# account for it.  # analysis: ignore[untracked-jit]
 @functools.partial(jax.jit, static_argnames=("s", "block", "backend"))
 def _batched_profile_jit(series_batch, *, s, block, backend):
     def one(x):

@@ -39,6 +39,15 @@ def pad_block_operands(win, mu, sig, ids, *, rows: int,
             pad_to(ids, rows_p, value=-1))
 
 
+def raw_d2_from_dots(dots, nrm_q, nrm_c):
+    """Raw-Euclidean squared-distance tile from a dot-product tile via
+    the norm identity ``||q||² + ||c||² - 2<q,c>`` (clamped at 0) —
+    the one place the raw-mode inversion is spelled (the engine's
+    masking runs *after* this, so poisoned pad lanes still retire)."""
+    return jnp.maximum(nrm_q[:, None] + nrm_c[None, :] - 2.0 * dots,
+                       0.0)
+
+
 def default_interpret() -> bool:
     """Pallas kernels execute for real only on TPU; elsewhere interpret."""
     return jax.default_backend() != "tpu"

@@ -128,6 +128,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "batched profile plan; a ladder --s the "
                          "(B, ladder) pan plan (profile-plan methods "
                          "only; not with --file/--stream)")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="before searching, run the padding-poison "
+                         "sanitizer (repro.analysis.sanitize) against "
+                         "this spec's own plan kinds on a small "
+                         "synthetic series — NaN/±inf pad canaries "
+                         "must leave results bit-identical; aborts "
+                         "(exit 2) on any finding.  Off by default; "
+                         "adds a few seconds of tiny compiles")
     ap.add_argument("--schedule", default="ladder",
                     choices=("ladder", "lb", "lb_abandon"),
                     help="ladder --s only: 'ladder' sweeps every rung "
@@ -214,6 +222,22 @@ def main(argv=None):
     engine = DiscordEngine(spec)
     mesh = f", ndev={engine.ndev}" if engine.sharded else ""
     print(f"{spec} -> backend={engine.backend}{mesh}")
+    if args.selfcheck:
+        from repro.analysis.sanitize import selfcheck
+        findings, checked = selfcheck(spec)
+        if findings:
+            for f in findings:
+                print(f"selfcheck: {f}")
+            print(f"selfcheck: {len(findings)} padding-poison "
+                  "finding(s) for this spec — aborting the search")
+            raise SystemExit(2)
+        if checked:
+            print(f"selfcheck: pad canaries clean across "
+                  f"{len(checked)} plan-kind run(s) "
+                  f"({', '.join(checked)})")
+        else:
+            print(f"selfcheck: method {spec.method!r} runs no "
+                  "bucketed plans; nothing to poison")
     if args.batch is not None:
         xb = np.stack([x] + [
             with_implanted_anomalies(

@@ -1,0 +1,367 @@
+"""Plan-integrity analyzer contract (repro.analysis; docs/analysis.md).
+
+  1. LINT — every rule fires on a synthetic true positive and stays
+     quiet on the adjacent near-miss; the ``# analysis: ignore[rule]``
+     pragma suppresses exactly its own rule; the repo itself lints
+     clean.
+  2. SPECKEY — the static audit passes on the real sources and
+     catches a deliberately dropped SearchSpec field / keyless plan
+     site; the runtime audit passes and catches a ``_plan_key`` that
+     forgets znorm.
+  3. SANITIZE — NaN/±inf pad canaries leave results bit-identical on
+     the real engine, and an intentionally broken id mask is caught.
+  4. SURFACE — importing ``repro.analysis`` and running the lint +
+     static-speckey CLI never initializes jax; exit codes gate on
+     findings; ``launch/discord.py --selfcheck`` is wired up.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (Finding, lint_source, report_dict,
+                            run_lint, static_audit, write_report)
+from repro.analysis.lint import package_root
+from repro.analysis.speckey import coverage
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+# ---------------------------------------------------------------------
+# 1. LINT: per-rule true positive + near-miss
+# ---------------------------------------------------------------------
+def _rules(src, relpath):
+    return sorted({f.rule for f in lint_source(src, relpath)})
+
+
+class TestTileMathRule:
+    def test_matmul_operator_positive(self):
+        assert _rules("d = q @ c.T\n", "core/foo.py") == ["tile-math"]
+
+    def test_dot_general_positive(self):
+        src = "out = lax.dot_general(a, b, dims)\n"
+        assert "tile-math" in _rules(src, "core/foo.py")
+
+    def test_manual_d2_positive(self):
+        src = "d2 = np.sum((a - b) ** 2, axis=1)\n"
+        assert "tile-math" in _rules(src, "core/foo.py")
+
+    def test_method_call_sum_positive(self):
+        src = "d2 = ((a - b) ** 2).sum(axis=1)\n"
+        assert "tile-math" in _rules(src, "core/foo.py")
+
+    def test_plain_sum_near_miss(self):
+        # a sum that is not a squared difference is fine
+        src = "tot = np.sum(a * b, axis=1)\ncs = np.cumsum(x ** 2)\n"
+        assert _rules(src, "core/foo.py") == []
+
+    def test_allowlisted_tile_layer(self):
+        src = "d2 = np.sum((a - b) ** 2, axis=1)\n"
+        assert _rules(src, "core/tiles.py") == []
+        assert _rules(src, "core/serial/brute.py") == []
+
+    def test_out_of_scope_lm_scaffolding(self):
+        # models/ legitimately matmuls — not this rule's business
+        assert _rules("y = x @ w\n", "models/attention.py") == []
+
+
+class TestHostSyncRule:
+    def test_item_in_build_positive(self):
+        src = ("def build():\n"
+               "    def fn(x):\n"
+               "        return x.max().item()\n"
+               "    return fn\n")
+        assert "host-sync" in _rules(src, "core/engine.py")
+
+    def test_numpy_call_in_build_positive(self):
+        src = ("def build():\n"
+               "    def fn(x):\n"
+               "        return np.asarray(x)\n"
+               "    return fn\n")
+        assert "host-sync" in _rules(src, "core/engine.py")
+
+    def test_float_and_block_until_ready_positive(self):
+        src = ("def build():\n"
+               "    def fn(x):\n"
+               "        y = float(x[0])\n"
+               "        return x.block_until_ready()\n"
+               "    return fn\n")
+        assert _rules(src, "core/engine.py") == ["host-sync"]
+
+    def test_outside_build_near_miss(self):
+        # host code outside a plan builder is the normal case
+        src = ("def search(self, x):\n"
+               "    xp = np.asarray(x)\n"
+               "    return float(xp.max())\n")
+        assert _rules(src, "core/engine.py") == []
+
+    def test_pan_engine_method_positive(self):
+        src = ("class PanEngine:\n"
+               "    def rows(self, q):\n"
+               "        return np.asarray(q)\n")
+        assert "host-sync" in _rules(src, "core/pan.py")
+
+    def test_pan_module_level_near_miss(self):
+        src = "def canonical_ladder(lad):\n    return np.sort(lad)\n"
+        assert _rules(src, "core/pan.py") == []
+
+
+class TestF64KernelRule:
+    def test_dtype_attribute_positive(self):
+        src = "acc = jnp.zeros(n, jnp.float64)\n"
+        assert "f64-kernel" in _rules(src, "kernels/foo.py")
+
+    def test_dtype_string_positive(self):
+        src = "x = x.astype('float64')\n"
+        assert "f64-kernel" in _rules(src, "kernels/foo.py")
+
+    def test_bare_dot_general_positive(self):
+        src = "t = lax.dot_general(q, c, dims)\n"
+        assert "f64-kernel" in _rules(src, "kernels/foo.py")
+
+    def test_pinned_dot_general_near_miss(self):
+        src = ("t = lax.dot_general(q, c, dims, "
+               "preferred_element_type=jnp.float32)\n")
+        assert _rules(src, "kernels/foo.py") == []
+
+    def test_f32_near_miss(self):
+        src = "x = jnp.asarray(x, jnp.float32)\n"
+        assert _rules(src, "kernels/foo.py") == []
+
+    def test_core_out_of_scope(self):
+        # f64 is the *host-side* accuracy convention outside kernels/
+        src = "x = np.asarray(x, np.float64)\n"
+        assert "f64-kernel" not in _rules(src, "core/engine.py")
+
+
+class TestUntrackedJitRule:
+    def test_module_level_jit_positive(self):
+        src = "fn = jax.jit(body)\n"
+        assert "untracked-jit" in _rules(src, "core/foo.py")
+
+    def test_decorator_jit_positive(self):
+        src = ("@functools.partial(jax.jit, static_argnames=('s',))\n"
+               "def impl(x, *, s):\n"
+               "    return x\n")
+        assert "untracked-jit" in _rules(src, "core/foo.py")
+
+    def test_inside_get_plan_near_miss(self):
+        src = ("def _get_plan(self, key, build):\n"
+               "    return jax.jit(build())\n")
+        assert _rules(src, "core/foo.py") == []
+
+    def test_kernels_out_of_scope(self):
+        assert _rules("fn = jax.jit(body)\n", "kernels/foo.py") == []
+
+
+class TestIgnorePragma:
+    SRC_SAME = "fn = jax.jit(body)  # analysis: ignore[untracked-jit]\n"
+    SRC_ABOVE = ("# why: standalone plane.  "
+                 "# analysis: ignore[untracked-jit]\n"
+                 "fn = jax.jit(body)\n")
+
+    def test_same_line(self):
+        assert _rules(self.SRC_SAME, "core/foo.py") == []
+
+    def test_line_above(self):
+        assert _rules(self.SRC_ABOVE, "core/foo.py") == []
+
+    def test_other_rule_not_suppressed(self):
+        src = "d = q @ c.T  # analysis: ignore[untracked-jit]\n"
+        assert _rules(src, "core/foo.py") == ["tile-math"]
+
+    def test_comma_list(self):
+        src = ("d = jax.jit(lambda: q @ c.T)  "
+               "# analysis: ignore[untracked-jit, tile-math]\n")
+        assert _rules(src, "core/foo.py") == []
+
+
+def test_repo_lints_clean():
+    assert run_lint() == []
+
+
+# ---------------------------------------------------------------------
+# 2. SPECKEY
+# ---------------------------------------------------------------------
+ENGINE_PATH = package_root() / "core" / "engine.py"
+
+
+def test_static_audit_clean_on_repo():
+    assert static_audit() == []
+
+
+def test_coverage_names_every_field():
+    import dataclasses
+
+    cov = coverage()
+    # jax-free cross-check against the dataclass via source parse is
+    # what static_audit does; here just pin the audited surface
+    assert set(cov) == {"s", "k", "method", "znorm", "backend", "P",
+                        "alpha", "seed", "r", "block", "ndev"}
+    assert "UNCOVERED" not in cov.values()
+
+
+def test_static_audit_catches_dropped_field():
+    src = ENGINE_PATH.read_text()
+    broken = src.replace(
+        'PLAN_KEY_FIELDS = ("s", "backend", "znorm", "block", "ndev")',
+        'PLAN_KEY_FIELDS = ("s", "backend", "block", "ndev")')
+    assert broken != src
+    findings = static_audit(engine_source=broken)
+    assert any(f.rule == "field-partition" and "znorm" in f.message
+               for f in findings)
+
+
+def test_static_audit_catches_gutted_plan_key():
+    src = ENGINE_PATH.read_text()
+    broken = src.replace(
+        'return (self.backend, self.spec.znorm, self.spec.block) \\\n'
+        '            + tuple(key)',
+        'return tuple(key)')
+    assert broken != src
+    findings = static_audit(engine_source=broken)
+    rules = {f.rule for f in findings}
+    assert "plan-key-prefix" in rules
+
+
+def test_static_audit_catches_nonliteral_key():
+    src = ("PLAN_KEY_FIELDS = (\"s\", \"backend\", \"znorm\", "
+           "\"block\", \"ndev\")\n"
+           "KIND_DISPATCH_FIELDS = (\"method\",)\n"
+           "TRACE_INVARIANT_FIELDS = (\"k\", \"P\", \"alpha\", "
+           "\"seed\", \"r\")\n"
+           "class DiscordEngine:\n"
+           "    def _plan_key(self, key):\n"
+           "        return (self.backend, self.spec.znorm,\n"
+           "                self.spec.block) + tuple(key)\n"
+           "    def _profile_plan(self, s, Lb):\n"
+           "        return self._get_plan(make_key(s, Lb), build)\n")
+    findings = static_audit(engine_source=src)
+    assert any(f.rule == "plan-key-sites" for f in findings)
+
+
+def test_runtime_audit_clean_on_repo():
+    from repro.analysis.speckey import runtime_audit
+    assert runtime_audit(backend="numpy") == []
+
+
+def test_runtime_audit_catches_incomplete_plan_key(monkeypatch):
+    from repro.analysis.speckey import runtime_audit
+    from repro.core.engine import DiscordEngine
+
+    def bad_plan_key(self, key):        # drops znorm (and the rest)
+        return tuple(key)
+
+    monkeypatch.setattr(DiscordEngine, "_plan_key", bad_plan_key)
+    findings = runtime_audit(backend="numpy")
+    assert any(f.rule == "key-collision" and "znorm" in f.message
+               for f in findings)
+
+
+# ---------------------------------------------------------------------
+# 3. SANITIZE
+# ---------------------------------------------------------------------
+def test_sanitizer_clean_on_local_kinds():
+    from repro.analysis.sanitize import run_sanitizer
+    findings, checked = run_sanitizer(
+        backends=("numpy",), znorms=(True, False),
+        kinds=("profile", "tail", "pan"))
+    assert findings == []
+    assert len(checked) == 6
+
+
+def test_sanitizer_catches_broken_mask(monkeypatch):
+    from repro.analysis.sanitize import run_sanitizer
+    from repro.core.tiles import TileEngine
+
+    # an identity _mask_ids leaves the bucket's pad windows live —
+    # exactly the masked-id -1 violation the pass exists to catch
+    monkeypatch.setattr(TileEngine, "_mask_ids", lambda self, ids: ids)
+    findings, _ = run_sanitizer(backends=("numpy",), znorms=(True,),
+                                kinds=("profile",))
+    assert any(f.rule in ("poison-leak", "poison-crash")
+               for f in findings)
+
+
+def test_pad_fill_restored_on_error():
+    from repro.analysis.sanitize import pad_fill
+    from repro.core import engine as engine_mod
+    with pytest.raises(RuntimeError):
+        with pad_fill(float("nan")):
+            raise RuntimeError("boom")
+    assert engine_mod.PAD_FILL == 0.0
+
+
+def test_selfcheck_maps_spec_to_kind_family():
+    from repro.analysis.sanitize import _kinds_for_spec
+    from repro.core.spec import SearchSpec
+    assert _kinds_for_spec(SearchSpec(s=24, method="matrix_profile")) \
+        == ("profile", "batched", "tail")
+    assert _kinds_for_spec(SearchSpec(s=(16, 24),
+                                      method="matrix_profile")) \
+        == ("pan", "pan_lb", "pan_tail", "pan_batched")
+    assert _kinds_for_spec(SearchSpec(s=24, method="hst")) == ()
+
+
+# ---------------------------------------------------------------------
+# 4. SURFACE: report schema, jax-freedom, CLI exit codes
+# ---------------------------------------------------------------------
+def test_report_schema(tmp_path):
+    f = Finding("lint", "tile-math", "core/x.py", 3, "nope")
+    doc = write_report(str(tmp_path / "r.json"), [f],
+                       meta={"passes": ["lint"]})
+    loaded = json.loads((tmp_path / "r.json").read_text())
+    assert loaded == doc
+    assert loaded["ok"] is False
+    assert loaded["counts"] == {"lint": 1}
+    assert loaded["findings"][0]["rule"] == "tile-math"
+    assert report_dict([])["ok"] is True
+    assert str(f) == "core/x.py:3: [lint/tile-math] nope"
+
+
+def test_lint_and_static_speckey_are_jax_free():
+    code = ("import sys\n"
+            "from repro.analysis import run_lint, static_audit\n"
+            "run_lint(); static_audit()\n"
+            "assert 'jax' not in sys.modules, 'jax was imported'\n"
+            "print('ok')\n")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"
+
+
+def test_cli_lint_exit_codes(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    rp = tmp_path / "rep.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint", "speckey",
+         "--static-only", "--report", str(rp)],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr + out.stdout
+    assert json.loads(rp.read_text())["ok"] is True
+    # corrupt tree -> findings -> exit 1 (run lint against a copy)
+    bad = tmp_path / "pkg"
+    (bad / "core").mkdir(parents=True)
+    (bad / "core" / "oops.py").write_text("d = q @ c.T\n")
+    code = ("import sys\n"
+            "from pathlib import Path\n"
+            "from repro.analysis import run_lint\n"
+            f"fs = run_lint(Path({str(bad)!r}))\n"
+            "sys.exit(1 if fs else 0)\n")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=60)
+    assert out.returncode == 1
+
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "nonsense"],
+        env=env, capture_output=True, text=True, timeout=60)
+    assert out.returncode == 2
+
+
+def test_launcher_selfcheck_flag_in_help():
+    from repro.launch.discord import build_parser
+    assert "--selfcheck" in build_parser().format_help()
