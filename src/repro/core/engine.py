@@ -73,6 +73,15 @@ docs/pan.md for the user guide):
 Every compiled plan body bumps ``stats.traces`` when (and only when)
 it is traced, so tests can assert the compile-once contract directly.
 
+Fleet plane (``repro.serve.DiscordServer``, docs/serving.md): the
+plan cache is a first-class :class:`PlanCache` object — private and
+unbounded per engine by default, shareable (budgeted, LRU-evicting)
+across a multi-tenant engine fleet — and every stream append is split
+into ``_append_begin`` / ``_append_exec`` / ``_append_finish`` phases
+so the server can coalesce same-plan-key appends from many tenants
+into one ``(*_mb, ...)`` micro-batched dispatch whose ``lax.map``
+lanes run the exact single-tenant bodies (bit-identical results).
+
 Work accounting is unified across planes (docs/cps.md): every result
 reports ``calls`` (= swept ``tile_lanes`` on this plane) and the
 derived ``cps``.
@@ -83,8 +92,9 @@ import functools
 import math
 import os
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import List, Optional, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -95,14 +105,14 @@ from ..kernels.common import ceil_div
 from ..kernels.registry import resolve_backend
 from .pan import (PanEngine, canonical_ladder, cross_length_ub,
                   global_normalized_topk, ladder_lb_margin, pan_lanes,
-                  pan_rung_shares)
+                  pan_rung_shares, pan_tail_sweep)
 from .result import DiscordResult, PanResult
 from .spec import SearchSpec, length_bucket
 from .tiles import TileEngine, exact_pair_d2, topk_nonoverlapping
 from .windows import sliding_stats
 
 __all__ = ["DiscordEngine", "DiscordStream", "PanStream", "EngineStats",
-           "ring_series_threshold", "PLAN_KEY_FIELDS",
+           "PlanCache", "ring_series_threshold", "PLAN_KEY_FIELDS",
            "KIND_DISPATCH_FIELDS", "TRACE_INVARIANT_FIELDS"]
 
 # -- SearchSpec keying contract (audited by repro.analysis.speckey) ----
@@ -145,6 +155,78 @@ def ring_series_threshold() -> int:
     a ring sweep per series.  Env-overridable so scaling tests can
     exercise both layouts on small inputs."""
     return int(os.environ.get("REPRO_RING_SERIES_THRESHOLD", 4096))
+
+
+class PlanCache:
+    """A shareable cache of compiled plans (the extracted session
+    plan-cache, now a first-class object so the serve plane can hand
+    every tenant engine the *same* instance).
+
+    Each :class:`DiscordEngine` owns a private unbounded ``PlanCache``
+    by default; ``repro.serve.DiscordServer`` shares one across its
+    whole engine fleet so bucket-identical tenant specs reuse each
+    other's compilations.  Keys are full ``_plan_key`` tuples — the
+    ``(backend, znorm, block)`` prefix keeps cross-engine entries
+    collision-free (that prefix was designed for exactly this merge;
+    see ``DiscordEngine._plan_key``).
+
+    ``budget`` is the memory knob: the maximum number of live compiled
+    plans (each entry pins one XLA executable, the dominant per-plan
+    host allocation).  Over-budget inserts evict the least recently
+    used entry — a hit refreshes recency — and call ``on_evict(key)``
+    so owners can drop side state.  ``hits`` / ``misses`` /
+    ``evictions`` feed the serve plane's ``ServeStats`` telemetry.
+    """
+
+    def __init__(self, budget: Optional[int] = None,
+                 on_evict: Optional[Callable] = None):
+        if budget is not None and budget < 1:
+            raise ValueError(f"budget must be a positive plan count "
+                             f"or None (unbounded), got {budget}")
+        self._plans: "OrderedDict" = OrderedDict()
+        self.budget = budget
+        self.on_evict = on_evict
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key) -> bool:
+        return key in self._plans
+
+    def get(self, key, thunk) -> Tuple[Callable, bool]:
+        """The cached plan under ``key``, building via ``thunk()`` on
+        a miss.  Returns ``(fn, fresh)`` — ``fresh`` tells the calling
+        engine to count a new plan."""
+        fn = self._plans.get(key)
+        if fn is not None:
+            self.hits += 1
+            self._plans.move_to_end(key)
+            return fn, False
+        self.misses += 1
+        fn = thunk()
+        self._plans[key] = fn
+        if self.budget is not None:
+            while len(self._plans) > self.budget:
+                old, _ = self._plans.popitem(last=False)
+                self.evictions += 1
+                if self.on_evict is not None:
+                    self.on_evict(old)
+        return fn, True
+
+    def as_dict(self) -> dict:
+        total = self.hits + self.misses
+        return {"plans": len(self._plans), "budget": self.budget,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0}
+
+    def __repr__(self) -> str:
+        return (f"PlanCache(plans={len(self._plans)}, "
+                f"budget={self.budget}, hits={self.hits}, "
+                f"misses={self.misses}, evictions={self.evictions})")
 
 
 @dataclass
@@ -194,7 +276,8 @@ class DiscordEngine:
     """
 
     def __init__(self, spec: Optional[SearchSpec] = None, *,
-                 mesh=None, **spec_kwargs):
+                 mesh=None, plan_cache: Optional[PlanCache] = None,
+                 **spec_kwargs):
         if spec is None:
             spec = SearchSpec(**spec_kwargs)
         elif spec_kwargs:
@@ -208,7 +291,10 @@ class DiscordEngine:
         # can't split the plan cache across backends
         self.backend = resolve_backend(spec.backend)
         self.stats = EngineStats()
-        self._plans: dict = {}
+        # private unbounded cache by default; the serve plane passes a
+        # shared (budgeted, LRU) instance so tenants co-own plans
+        self.plan_cache = (plan_cache if plan_cache is not None
+                           else PlanCache())
         self._explicit_mesh = mesh is not None
         self._mesh = None
         if mesh is not None:
@@ -258,33 +344,71 @@ class DiscordEngine:
         """Full cache key of a plan: the session-invariant spec prefix
         (``backend``/``znorm``/``block`` — everything a compiled tile
         sweep closes over besides the per-kind geometry) + the kind's
-        own key.  The prefix is what lets a future shared cross-tenant
-        cache merge engine caches without collisions; the speckey
-        audit (docs/analysis.md) checks it stays complete."""
+        own key.  The prefix is what lets the shared cross-tenant
+        cache (``repro.serve.DiscordServer``'s ``PlanCache``) merge
+        engine caches without collisions; the speckey audit
+        (docs/analysis.md) checks it stays complete."""
         return (self.backend, self.spec.znorm, self.spec.block) \
             + tuple(key)
 
+    @property
+    def _plans(self):
+        """This session's view of its (possibly shared) plan cache —
+        the mapping the speckey runtime audit inspects."""
+        return self.plan_cache._plans
+
     def _get_plan(self, key, build):
         key = self._plan_key(key)
-        fn = self._plans.get(key)
-        if fn is None:
-            fn = self._plans[key] = jax.jit(build())
+        fn, fresh = self.plan_cache.get(key,
+                                        lambda: jax.jit(build()))
+        if fresh:
             self.stats.plans += 1
         return fn
 
+    def _profile_body(self, s: int):
+        """Per-series bucketed profile body — the computation shared
+        verbatim by the single-tenant ``("profile", ...)`` plan and
+        the serve plane's ``("profile_mb", ...)`` lanes, so a
+        micro-batched fill is bit-identical to the tenant's own."""
+        spec, be = self.spec, self.backend
+
+        def body(series_pad, n_valid):
+            eng = TileEngine(series_pad, s, block=spec.block,
+                             backend=be, znorm=spec.znorm,
+                             n_valid=n_valid)
+            return eng.profile()
+        return body
+
     def _profile_plan(self, s: int, Lb: int):
         """(series_pad (Lb,), n_valid) -> (d2 (n_pad,), neighbor)."""
-        spec, be = self.spec, self.backend
+        body = self._profile_body(s)
 
         def build():
             def fn(series_pad, n_valid):
                 self.stats.traces += 1        # trace-time side effect
-                eng = TileEngine(series_pad, s, block=spec.block,
-                                 backend=be, znorm=spec.znorm,
-                                 n_valid=n_valid)
-                return eng.profile()
+                return body(series_pad, n_valid)
             return fn
         return self._get_plan(("profile", s, Lb), build)
+
+    def _profile_mb_plan(self, s: int, Lb: int, B: int):
+        """(stack (B, Lb), n_valid (B,)) -> (d2 (B, n_pad), ngh).
+
+        Cross-tenant micro-batched fill (the serve plane's coalesced
+        dispatch): ``B`` tenant series of the same bucket, each lane
+        running the exact single-tenant profile body with its *own*
+        valid window count.  Always ``lax.map`` — never vmap — so
+        every lane's result is bit-identical to that tenant's own
+        ``("profile", ...)`` plan invocation.
+        """
+        body = self._profile_body(s)
+
+        def build():
+            def fn(stack, n_valid):
+                self.stats.traces += 1
+                return lax.map(lambda t: body(t[0], t[1]),
+                               (stack, n_valid))
+            return fn
+        return self._get_plan(("profile_mb", s, Lb, B), build)
 
     def _profile_each(self, s: int, sub, n_valid):
         """Per-series bucketed profile of a (b, Lb) stack — the one
@@ -324,32 +448,61 @@ class DiscordEngine:
         windows*, which the host folds into the old profile (append-
         only: old nnds can only be superseded, never worsen).
         """
-        spec, be = self.spec, self.backend
+        body = self._tail_body(s, Qb)
 
         def build():
             def fn(series_pad, q0, n_valid):
                 self.stats.traces += 1
-                eng = TileEngine(series_pad, s, block=spec.block,
-                                 backend=be, znorm=spec.znorm,
-                                 n_valid=n_valid)
-                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
-                q = eng.query_block(qids)
-                starts = jnp.arange(eng.nb, dtype=jnp.int32) * eng.block
-
-                def one(c0):
-                    d2, cid = eng.sweep(q, c0)
-                    return (jnp.min(d2, axis=1),
-                            cid[jnp.argmin(d2, axis=1)],
-                            jnp.min(d2, axis=0),
-                            q.ids[jnp.argmin(d2, axis=0)])
-
-                rm, ra, cm, ca = lax.map(one, starts)
-                sel = jnp.argmin(rm, axis=0)[None]        # best block/row
-                row_d2 = jnp.take_along_axis(rm, sel, axis=0)[0]
-                row_ngh = jnp.take_along_axis(ra, sel, axis=0)[0]
-                return row_d2, row_ngh, cm.reshape(-1), ca.reshape(-1)
+                return body(series_pad, q0, n_valid)
             return fn
         return self._get_plan(("tail", s, Lb, Qb), build)
+
+    def _tail_body(self, s: int, Qb: int):
+        """Per-series tail-sweep body — shared verbatim by the
+        single-tenant ``("tail", ...)`` plan and the serve plane's
+        ``("tail_mb", ...)`` lanes (bit-identical coalescing)."""
+        spec, be = self.spec, self.backend
+
+        def body(series_pad, q0, n_valid):
+            eng = TileEngine(series_pad, s, block=spec.block,
+                             backend=be, znorm=spec.znorm,
+                             n_valid=n_valid)
+            qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+            q = eng.query_block(qids)
+            starts = jnp.arange(eng.nb, dtype=jnp.int32) * eng.block
+
+            def one(c0):
+                d2, cid = eng.sweep(q, c0)
+                return (jnp.min(d2, axis=1),
+                        cid[jnp.argmin(d2, axis=1)],
+                        jnp.min(d2, axis=0),
+                        q.ids[jnp.argmin(d2, axis=0)])
+
+            rm, ra, cm, ca = lax.map(one, starts)
+            sel = jnp.argmin(rm, axis=0)[None]        # best block/row
+            row_d2 = jnp.take_along_axis(rm, sel, axis=0)[0]
+            row_ngh = jnp.take_along_axis(ra, sel, axis=0)[0]
+            return row_d2, row_ngh, cm.reshape(-1), ca.reshape(-1)
+        return body
+
+    def _tail_mb_plan(self, s: int, Lb: int, Qb: int, B: int):
+        """(stack (B, Lb), q0 (B,), n_valid (B,)) ->
+            (row_d2 (B, Qb), row_ngh, col_d2 (B, n_pad), col_ngh).
+
+        Cross-tenant micro-batched streaming append: ``B`` same-bucket
+        tail sweeps coalesced into one dispatch, each lane running the
+        exact single-tenant tail body with its own ``q0`` / valid
+        count (``lax.map`` lanes — bit-identical to ``("tail", ...)``).
+        """
+        body = self._tail_body(s, Qb)
+
+        def build():
+            def fn(stack, q0, n_valid):
+                self.stats.traces += 1
+                return lax.map(lambda t: body(t[0], t[1], t[2]),
+                               (stack, q0, n_valid))
+            return fn
+        return self._get_plan(("tail_mb", s, Lb, Qb, B), build)
 
     def _pan_plan(self, ladder: tuple, Lb: int):
         """(series_pad (Lb,), n_valid0) -> (d2 (R, n_pad), ngh).
@@ -362,17 +515,46 @@ class DiscordEngine:
         one compiled sweep serves the whole bucket (keyed on the
         canonical ladder — the *ladder bucket* — and ``Lb``).
         """
-        spec, be = self.spec, self.backend
+        body = self._pan_body(ladder)
 
         def build():
             def fn(series_pad, n_valid0):
                 self.stats.traces += 1
-                peng = PanEngine(series_pad, ladder, block=spec.block,
-                                 backend=be, znorm=spec.znorm,
-                                 n_valid=n_valid0)
-                return peng.profile()
+                return body(series_pad, n_valid0)
             return fn
         return self._get_plan(("pan", ladder, Lb), build)
+
+    def _pan_body(self, ladder: tuple):
+        """Per-series ladder-sweep body — shared verbatim by the
+        single-tenant ``("pan", ...)`` plan and the serve plane's
+        ``("pan_mb", ...)`` lanes (bit-identical coalescing)."""
+        spec, be = self.spec, self.backend
+
+        def body(series_pad, n_valid0):
+            peng = PanEngine(series_pad, ladder, block=spec.block,
+                             backend=be, znorm=spec.znorm,
+                             n_valid=n_valid0)
+            return peng.profile()
+        return body
+
+    def _pan_mb_plan(self, ladder: tuple, Lb: int, B: int):
+        """(stack (B, Lb), n_valid0 (B,)) -> (d2 (B, R, n_pad), ngh).
+
+        Cross-tenant micro-batched ladder fill: unlike the
+        ``("pan_batched", ...)`` serving plan (one shared valid count,
+        vmapped on ``xla``), every lane here carries its own tenant's
+        base-rung count and runs the exact single-tenant pan body
+        under ``lax.map`` — bit-identical to ``("pan", ...)``.
+        """
+        body = self._pan_body(ladder)
+
+        def build():
+            def fn(stack, n_valid0):
+                self.stats.traces += 1
+                return lax.map(lambda t: body(t[0], t[1]),
+                               (stack, n_valid0))
+            return fn
+        return self._get_plan(("pan_mb", ladder, Lb, B), build)
 
     # -- mesh-sharded plan family (the ring fold-in) -------------------
     def _shard_geom(self, s: int, Lb: int, ndev: int):
@@ -584,18 +766,47 @@ class DiscordEngine:
         column minima fold new-neighbor improvements into each rung's
         old profile.
         """
-        spec, be = self.spec, self.backend
+        body = self._pan_tail_body(ladder, Qb)
 
         def build():
             def fn(series_pad, q0, n_valid0):
                 self.stats.traces += 1
-                peng = PanEngine(series_pad, ladder, block=spec.block,
-                                 backend=be, znorm=spec.znorm,
-                                 n_valid=n_valid0)
-                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
-                return peng.tail(qids)
+                return body(series_pad, q0, n_valid0)
             return fn
         return self._get_plan(("pan_tail", ladder, Lb, Qb), build)
+
+    def _pan_tail_body(self, ladder: tuple, Qb: int):
+        """Per-series pan tail body (``pan.pan_tail_sweep``) — shared
+        verbatim by the single-tenant ``("pan_tail", ...)`` plan and
+        the serve plane's ``("pan_tail_mb", ...)`` lanes."""
+        spec, be = self.spec, self.backend
+
+        def body(series_pad, q0, n_valid0):
+            return pan_tail_sweep(series_pad, ladder, q0, Qb,
+                                  block=spec.block, backend=be,
+                                  znorm=spec.znorm, n_valid=n_valid0)
+        return body
+
+    def _pan_tail_mb_plan(self, ladder: tuple, Lb: int, Qb: int,
+                          B: int):
+        """(stack (B, Lb), q0 (B,), n_valid0 (B,)) ->
+            (rd2 (B, R, Qb), rngh, cd2 (B, R, n_pad), cngh).
+
+        Cross-tenant micro-batched pan append: ``B`` same-ladder,
+        same-bucket tail sweeps in one dispatch, each lane the exact
+        single-tenant carried-QT body with its own ``q0`` / base-rung
+        count (``lax.map`` — bit-identical to ``("pan_tail", ...)``).
+        """
+        body = self._pan_tail_body(ladder, Qb)
+
+        def build():
+            def fn(stack, q0, n_valid0):
+                self.stats.traces += 1
+                return lax.map(lambda t: body(t[0], t[1], t[2]),
+                               (stack, q0, n_valid0))
+            return fn
+        return self._get_plan(("pan_tail_mb", ladder, Lb, Qb, B),
+                              build)
 
     def _pan_tail_sharded_plan(self, ladder: tuple, Lb: int, Qb: int):
         """Sharded pan append: same contract as ``_pan_tail_plan`` but
@@ -1560,38 +1771,75 @@ class DiscordStream:
         return self._ngh.copy()
 
     # -- updates -------------------------------------------------------
-    def append(self, points) -> "DiscordStream":
-        """Fold new points into the profile, sweeping only the tail."""
-        pts = np.asarray(points, np.float64).ravel()
-        if pts.size == 0:
-            return self
+    #
+    # ``append`` is split into three phases so the serve plane
+    # (``repro.serve.DiscordServer``) can interleave them across
+    # tenants: ``_append_begin`` mutates the series and stages the op
+    # the device must run, ``_append_exec`` runs it through this
+    # session's own plans, ``_append_finish`` folds the outputs into
+    # the profile.  A micro-batched dispatch replaces only the middle
+    # phase (same per-lane body, ``lax.map``-ed), so coalesced appends
+    # stay bit-identical to ``append``'s.
+
+    def _append_begin(self, pts: np.ndarray):
+        """Absorb ``pts`` into the series and stage the device op this
+        append needs — ``None`` while the series is still shorter than
+        one window (nothing to sweep)."""
         eng, s = self.engine, self.s
         n_old = max(0, self._x.shape[0] - s + 1)
         self._x = np.concatenate([self._x, pts])
         L = self._x.shape[0]
         n_new = max(0, L - s + 1)
         if n_new == n_old:            # still shorter than one window
-            return self
+            return None
         Lb = length_bucket(L)
         xp = _bucket_pad(self._x, Lb)
         ndev = eng.ndev if self._sharded else 1
         if n_old == 0:                # first fill: one full-profile plan
             if self._sharded:
-                d2, arg, lanes, _ = eng._ring_exec(
-                    s, Lb, jnp.asarray(xp), np.int32(n_new))
+                _, per, n_sh = eng._shard_geom(s, Lb, ndev)
+                lanes = n_sh * per * ndev
             else:
-                d2, arg = eng._profile_plan(s, Lb)(jnp.asarray(xp),
-                                                   np.int32(n_new))
                 lanes = eng._n_pad(s, Lb) ** 2
+            return {"kind": "fill", "s": s, "Lb": Lb, "xp": xp,
+                    "n_new": n_new, "lanes": lanes}
+        n_tail = n_new - n_old
+        Qb = length_bucket(n_tail, lo=32)
+        lanes = Qb * (eng._shard_geom(s, Lb, ndev)[2] if self._sharded
+                      else eng._n_pad(s, Lb))
+        return {"kind": "tail", "s": s, "Lb": Lb, "Qb": Qb, "xp": xp,
+                "q0": n_old, "n_new": n_new, "n_tail": n_tail,
+                "lanes": lanes}
+
+    def _append_exec(self, op: dict):
+        """Run a staged op through the single-tenant plans (device
+        outputs returned un-synced — the caller's host folds block)."""
+        eng = self.engine
+        if op["kind"] == "fill":
+            if self._sharded:
+                d2, arg, _, _ = eng._ring_exec(
+                    op["s"], op["Lb"], jnp.asarray(op["xp"]),
+                    np.int32(op["n_new"]))
+                return d2, arg
+            return eng._profile_plan(op["s"], op["Lb"])(
+                jnp.asarray(op["xp"]), np.int32(op["n_new"]))
+        plan = (eng._tail_sharded_plan(op["s"], op["Lb"], op["Qb"])
+                if self._sharded
+                else eng._tail_plan(op["s"], op["Lb"], op["Qb"]))
+        return plan(jnp.asarray(op["xp"]), np.int32(op["q0"]),
+                    np.int32(op["n_new"]))
+
+    def _append_finish(self, op: dict, out) -> "DiscordStream":
+        """Fold one op's device outputs into the profile (host side)."""
+        eng = self.engine
+        n_new = op["n_new"]
+        if op["kind"] == "fill":
+            d2, arg = out
             self._d2 = np.asarray(d2, np.float64)[:n_new]
             self._ngh = np.asarray(arg, np.int64)[:n_new]
         else:                         # tail sweep only
-            n_tail = n_new - n_old
-            Qb = length_bucket(n_tail, lo=32)
-            plan = (eng._tail_sharded_plan(s, Lb, Qb) if self._sharded
-                    else eng._tail_plan(s, Lb, Qb))
-            rd2, rngh, cd2, cngh = plan(
-                jnp.asarray(xp), np.int32(n_old), np.int32(n_new))
+            rd2, rngh, cd2, cngh = out
+            n_tail = op["n_tail"]
             d2 = np.concatenate([self._d2,
                                  np.asarray(rd2, np.float64)[:n_tail]])
             ngh = np.concatenate([self._ngh,
@@ -1602,15 +1850,22 @@ class DiscordStream:
             d2 = np.where(better, cm, d2)
             ngh = np.where(better, ca, ngh)
             self._d2, self._ngh = d2, ngh
-            if self._sharded:
-                lanes = Qb * eng._shard_geom(s, Lb, ndev)[2]
-            else:
-                lanes = Qb * eng._n_pad(s, Lb)
+        lanes = op["lanes"]
         self.appends += 1
         self.tile_lanes += lanes
         eng.stats.appends += 1
         eng.stats.tile_lanes += lanes
         return self
+
+    def append(self, points) -> "DiscordStream":
+        """Fold new points into the profile, sweeping only the tail."""
+        pts = np.asarray(points, np.float64).ravel()
+        if pts.size == 0:
+            return self
+        op = self._append_begin(pts)
+        if op is None:
+            return self
+        return self._append_finish(op, self._append_exec(op))
 
     # -- queries -------------------------------------------------------
     def discords(self, k: Optional[int] = None) -> DiscordResult:
@@ -1701,12 +1956,15 @@ class PanStream:
         return self._ngh[rung].copy()
 
     # -- updates -------------------------------------------------------
-    def append(self, points) -> "PanStream":
-        """Fold new points into every rung's profile, sweeping only
-        the tail (one carried-QT pass for the whole ladder)."""
-        pts = np.asarray(points, np.float64).ravel()
-        if pts.size == 0:
-            return self
+    #
+    # Same three-phase split as ``DiscordStream`` (see the comment
+    # there): the serve plane coalesces the middle phase across
+    # tenants while begin/finish stay per-tenant, so micro-batched
+    # pan appends are bit-identical to sequential ones.
+
+    def _append_begin(self, pts: np.ndarray):
+        """Absorb ``pts`` and stage the device op — ``None`` while the
+        longest rung doesn't fit yet."""
         eng, lad = self.engine, self.ladder
         s0, smax = lad[0], lad[-1]
         n_old = max(0, self._x.shape[0] - s0 + 1)   # base rung
@@ -1714,43 +1972,66 @@ class PanStream:
         L = self._x.shape[0]
         n_new = L - s0 + 1
         if L < smax + 1:              # longest rung doesn't fit yet
-            return self
+            return None
         Lb = length_bucket(L)
         xp = _bucket_pad(self._x, Lb)
         ndev = eng.ndev if self._sharded else 1
         if not self._filled:          # first fill: one full ladder plan
             if self._sharded:
-                plan = eng._pan_sharded_plan(lad, Lb)
                 n_pad, nb_p = eng._pan_row_geom(lad, Lb, ndev)
                 n_rows = nb_p * eng.spec.block
             else:
-                plan = eng._pan_plan(lad, Lb)
                 n_rows = n_pad = eng._n_pad(s0, Lb)
-            d2s, args = plan(jnp.asarray(xp), np.int32(n_new))
+            return {"kind": "pan_fill", "ladder": lad, "Lb": Lb,
+                    "xp": xp, "n_new": n_new,
+                    "shares": pan_rung_shares(lad, n_rows, n_pad),
+                    "cells": n_rows * n_pad}
+        # the tail's base-rung query ids span every rung's new
+        # windows: rung r's start n_old - (s_r - s0) is smallest
+        # at the longest rung
+        q0 = max(0, n_old - (smax - s0))
+        Qb = length_bucket(n_new - q0, lo=32)
+        n_cols = (eng._shard_geom(s0, Lb, ndev)[2]
+                  if self._sharded else eng._n_pad(s0, Lb))
+        return {"kind": "pan_tail", "ladder": lad, "Lb": Lb, "Qb": Qb,
+                "xp": xp, "q0": q0, "n_new": n_new,
+                "shares": pan_rung_shares(lad, Qb, n_cols),
+                "cells": Qb * n_cols}
+
+    def _append_exec(self, op: dict):
+        """Run a staged op through the single-tenant plans."""
+        eng, lad = self.engine, self.ladder
+        if op["kind"] == "pan_fill":
+            plan = (eng._pan_sharded_plan(lad, op["Lb"])
+                    if self._sharded else eng._pan_plan(lad, op["Lb"]))
+            return plan(jnp.asarray(op["xp"]), np.int32(op["n_new"]))
+        plan = (eng._pan_tail_sharded_plan(lad, op["Lb"], op["Qb"])
+                if self._sharded
+                else eng._pan_tail_plan(lad, op["Lb"], op["Qb"]))
+        return plan(jnp.asarray(op["xp"]), np.int32(op["q0"]),
+                    np.int32(op["n_new"]))
+
+    def _append_finish(self, op: dict, out) -> "PanStream":
+        """Fold one op's device outputs into every rung's profile."""
+        eng, lad = self.engine, self.ladder
+        if op["kind"] == "pan_fill":
+            d2s, args = out
             d2s = np.asarray(d2s, np.float64)
             args = np.asarray(args, np.int64)
+            L = op["n_new"] + lad[0] - 1
             for r, s_r in enumerate(lad):
                 n_r = L - s_r + 1
                 self._d2[r] = d2s[r, :n_r].copy()
                 self._ngh[r] = args[r, :n_r].copy()
-            shares = pan_rung_shares(lad, n_rows, n_pad)
-            cells = n_rows * n_pad
             self._filled = True
         else:                         # pan tail sweep only
-            # the tail's base-rung query ids span every rung's new
-            # windows: rung r's start n_old - (s_r - s0) is smallest
-            # at the longest rung
-            q0 = max(0, n_old - (smax - s0))
-            Qb = length_bucket(n_new - q0, lo=32)
-            plan = (eng._pan_tail_sharded_plan(lad, Lb, Qb)
-                    if self._sharded
-                    else eng._pan_tail_plan(lad, Lb, Qb))
-            rd2, rng, cd2, cng = plan(jnp.asarray(xp), np.int32(q0),
-                                      np.int32(n_new))
+            rd2, rng, cd2, cng = out
             rd2 = np.asarray(rd2, np.float64)
             rng = np.asarray(rng, np.int64)
             cd2 = np.asarray(cd2, np.float64)
             cng = np.asarray(cng, np.int64)
+            q0 = op["q0"]
+            L = op["n_new"] + lad[0] - 1
             for r, s_r in enumerate(lad):
                 n_r_old = self._d2[r].shape[0]
                 n_r = L - s_r + 1
@@ -1766,19 +2047,27 @@ class PanStream:
                 better = cm < d2
                 self._d2[r] = np.where(better, cm, d2)
                 self._ngh[r] = np.where(better, ca, ngh)
-            n_cols = (eng._shard_geom(s0, Lb, ndev)[2]
-                      if self._sharded else eng._n_pad(s0, Lb))
-            shares = pan_rung_shares(lad, Qb, n_cols)
-            cells = Qb * n_cols
+        shares = op["shares"]
         lanes = sum(shares)
         for r, share in enumerate(shares):
             self._rung_lanes[r] += share
         self.appends += 1
         self.tile_lanes += lanes
-        self._cells += cells
+        self._cells += op["cells"]
         eng.stats.appends += 1
         eng.stats.tile_lanes += lanes
         return self
+
+    def append(self, points) -> "PanStream":
+        """Fold new points into every rung's profile, sweeping only
+        the tail (one carried-QT pass for the whole ladder)."""
+        pts = np.asarray(points, np.float64).ravel()
+        if pts.size == 0:
+            return self
+        op = self._append_begin(pts)
+        if op is None:
+            return self
+        return self._append_finish(op, self._append_exec(op))
 
     # -- queries -------------------------------------------------------
     def discords(self, k: Optional[int] = None) -> PanResult:

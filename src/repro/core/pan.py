@@ -93,8 +93,9 @@ from ..kernels.registry import get_dot_backend, resolve_backend
 from .windows import sliding_stats
 
 __all__ = ["PanEngine", "canonical_ladder", "pan_lanes",
-           "pan_rung_shares", "cross_length_lb", "cross_length_ub",
-           "ladder_lb_margin", "global_normalized_topk"]
+           "pan_rung_shares", "pan_tail_sweep", "cross_length_lb",
+           "cross_length_ub", "ladder_lb_margin",
+           "global_normalized_topk"]
 
 
 def canonical_ladder(windows) -> Tuple[int, ...]:
@@ -336,6 +337,26 @@ class PanEngine:
         R = len(self.ladder)
         return (d2.transpose(1, 0, 2).reshape(R, -1),
                 arg.transpose(1, 0, 2).reshape(R, -1))
+
+
+def pan_tail_sweep(series_pad, ladder: Tuple[int, ...], q0, Qb: int, *,
+                   block: int = 256, backend: Optional[str] = None,
+                   znorm: bool = True, n_valid=None):
+    """One carried-QT tail sweep — the batched tail entry point.
+
+    The ``Qb`` (bucketed, masked) base-rung query windows starting at
+    ``q0`` against every candidate at every rung of ``ladder``:
+    exactly :meth:`PanEngine.tail` over a fresh engine, packaged as a
+    function so the single-tenant ``("pan_tail", ...)`` plan and the
+    serve plane's per-lane ``("pan_tail_mb", ...)`` bodies share one
+    definition (bit-identical coalescing).  ``q0`` and ``n_valid`` may
+    be traced; ``Qb`` is static.  Returns
+    ``(row_d2 (R, Qb), row_ngh, col_d2 (R, n_pad), col_ngh)``.
+    """
+    peng = PanEngine(series_pad, ladder, block=block, backend=backend,
+                     znorm=znorm, n_valid=n_valid)
+    qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+    return peng.tail(qids)
 
 
 # ----------------------------------------------------------------------

@@ -76,6 +76,22 @@ _ALIASES = {"jnp": "xla", "ref": "numpy", "np": "numpy"}
 
 ENV_VAR = "REPRO_TILE_BACKEND"
 
+# On an effectively single-threaded host the XLA CPU client's async
+# dispatch pool has one thread, and a host callback (the ``numpy``
+# reference backend routes every tile through ``jax.pure_callback``)
+# can deadlock against the program that is waiting on it: the callback
+# blocks re-entering Python while the dispatch thread holds the slot
+# its result is needed to release.  Synchronous dispatch runs the
+# program on the caller's thread and sidesteps the cycle; on a one-CPU
+# box there is no dispatch latency to hide anyway.  Set
+# ``REPRO_KEEP_ASYNC_DISPATCH=1`` to opt out of the guard.
+if ((os.cpu_count() or 1) <= 1
+        and not os.environ.get("REPRO_KEEP_ASYNC_DISPATCH")):
+    try:
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except AttributeError:      # jax build without the flag
+        pass
+
 
 def register_backend(name: str):
     """Decorator: add a tile backend under ``name``."""

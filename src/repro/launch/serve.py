@@ -1,18 +1,88 @@
-"""Serving launcher: batched generation with the smoke config."""
+"""Serving launcher: LM generation (default) or the multi-tenant
+discord serve plane (``serve discord ...``, docs/serving.md)."""
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_smoke_config, list_archs
-from repro.models import init_params
-from repro.serve import ServeEngine
+
+def discord_main(argv=None):
+    """Front door for the multi-tenant discord serve plane: spin up a
+    synthetic tenant fleet, stream appends through the coalescing
+    flush path, and print the ServeStats report."""
+    from repro.core.spec import SearchSpec
+    from repro.serve import DiscordServer
+
+    ap = argparse.ArgumentParser(
+        prog="serve discord",
+        description="Multi-tenant streaming discord serve plane "
+                    "(docs/serving.md)")
+    ap.add_argument("--tenants", type=int, default=64)
+    ap.add_argument("--window", type=int, default=64,
+                    help="window length s (every tenant)")
+    ap.add_argument("--ladder", type=str, default=None,
+                    help="comma-separated window ladder; makes the "
+                         "tenants pan (multi-window) sessions")
+    ap.add_argument("--history", type=int, default=512,
+                    help="warm-up points per tenant")
+    ap.add_argument("--appends", type=int, default=4,
+                    help="streamed appends per tenant")
+    ap.add_argument("--append-size", type=int, default=64,
+                    help="points per append")
+    ap.add_argument("--cache-budget", type=int, default=None,
+                    help="max live compiled plans in the shared cache")
+    ap.add_argument("--max-group", type=int, default=64,
+                    help="largest micro-batch lane count per dispatch")
+    ap.add_argument("--backend", type=str, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="print the full ServeStats report as JSON")
+    args = ap.parse_args(argv)
+
+    if args.ladder:
+        s = tuple(int(v) for v in args.ladder.split(","))
+    else:
+        s = args.window
+    spec = SearchSpec(s=s, k=3, method="matrix_profile",
+                      backend=args.backend)
+    srv = DiscordServer(cache_budget=args.cache_budget,
+                        max_group=args.max_group)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    for t in range(args.tenants):
+        srv.open(f"tenant-{t:05d}", spec,
+                 history=rng.normal(size=args.history))
+    for _ in range(args.appends):
+        for t in range(args.tenants):
+            srv.append(f"tenant-{t:05d}",
+                       rng.normal(size=args.append_size))
+        srv.flush()
+    dt = time.perf_counter() - t0
+    stats = srv.stats()
+    print(f"served {stats.tenants} tenants, "
+          f"{stats.appends_applied} appends in {dt:.2f}s: "
+          f"{stats.dispatches} dispatches "
+          f"(sequential equivalent {stats.sequential_dispatches}, "
+          f"ratio {stats.dispatch_ratio:.3f}), "
+          f"cache hit rate {stats.cache_hit_rate:.3f}, "
+          f"plans {stats.cache['plans']}, "
+          f"evictions {stats.cache['evictions']}")
+    top = srv.discords("tenant-00000")
+    print(f"tenant-00000 discords: {top}")
+    if args.json:
+        print(json.dumps(stats.as_dict(), indent=2, default=str))
 
 
-def main(argv=None):
+def lm_main(argv=None):
+    import jax
+
+    from repro.configs import get_smoke_config, list_archs
+    from repro.models import init_params
+    from repro.serve import ServeEngine
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--requests", type=int, default=8)
@@ -38,6 +108,14 @@ def main(argv=None):
           f"in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     for r in done[:3]:
         print("  ", r.tokens[:12])
+
+
+def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "discord":
+        return discord_main(argv[1:])
+    return lm_main(argv)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
+from .discord import AdmissionError, DiscordServer, ServeStats
 from .engine import GenerationResult, ServeEngine
 
-__all__ = ["ServeEngine", "GenerationResult"]
+__all__ = ["ServeEngine", "GenerationResult", "DiscordServer",
+           "ServeStats", "AdmissionError"]

@@ -6,13 +6,18 @@ series — loss spikes, data corruption, router collapse, a failing
 host — are exactly *discords*: windows maximally far from every other
 window.
 
-The monitor holds one persistent :class:`repro.core.DiscordStream` per
-registered metric: each scan *appends* only the points logged since
-the last scan and the stream's tail sweep updates the exact nnd
-profile incrementally — the per-scan from-scratch
-``exact_nnd_profile`` recompute is gone, and the significance
-threshold now comes from the true full profile instead of a
-subsampled stand-in.
+The monitor rides a :class:`repro.serve.DiscordServer`: every metric
+is a *tenant* whose persistent stream appends only the points logged
+since the last scan — the per-scan from-scratch ``exact_nnd_profile``
+recompute is gone, and the significance threshold comes from the true
+full profile instead of a subsampled stand-in.  Riding the serve
+plane (instead of holding private streams, as earlier versions did)
+buys the fleet wins for free: one ``scan()`` queues every metric's
+delta and drains them in a single flush, so same-geometry metrics
+coalesce into micro-batched dispatches and all metrics share one plan
+cache — results bit-identical to per-metric sequential appends (the
+serve plane's parity contract).  Pass ``server=`` to join an existing
+fleet; by default the monitor owns a private one.
 
 The significance rule follows Avogadro et al. 2020 ("significant
 discords"): a discord is flagged only when its nnd exceeds
@@ -69,15 +74,16 @@ class MonitorReport:
 class DiscordMonitor:
     """Periodic exact-discord scan over telemetry series.
 
-    One engine (one spec, one plan cache) serves every metric; each
-    metric gets its own append-only profile stream.
+    Every metric is a tenant of one :class:`repro.serve.DiscordServer`
+    (one spec, one shared plan cache, coalesced dispatches); each
+    metric's append-only profile stream persists across scans.
     """
 
     def __init__(self, buffer: MetricBuffer, *, window: int = 32,
                  k: int = 3, z: float = 3.0, min_points: int = 256,
                  difference: bool = True,
                  max_scan_points: int = 16_384,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, server=None):
         self.buffer = buffer
         self.window = window
         self.k = k
@@ -86,10 +92,19 @@ class DiscordMonitor:
         self.difference = difference
         self.max_scan_points = max(int(max_scan_points),
                                    min_points, 4 * window)
-        self.engine = DiscordEngine(SearchSpec(
-            s=window, k=k, method="matrix_profile", znorm=False,
-            backend=backend))
-        self._streams: Dict[str, DiscordStream] = {}
+        self.spec = SearchSpec(s=window, k=k, method="matrix_profile",
+                               znorm=False, backend=backend)
+        if server is None:
+            # deferred import: repro.serve lazily imports this module
+            # for its straggler wiring
+            from repro.serve.discord import DiscordServer
+            server = DiscordServer()
+        self.server = server
+        # the fleet engine behind every metric tenant (stable object:
+        # engines dedupe per spec, so session counters accumulate here)
+        self.engine: DiscordEngine = server.engine_for(self.spec)
+        self._tenants: Dict[str, str] = {}    # metric -> tenant id
+        self._wrap_seq = 0                    # ephemeral-tenant ids
         self._consumed: Dict[str, int] = {}   # raw points folded so far
         self._norm: Dict[str, Tuple[float, float]] = {}   # frozen (loc, scale)
         self._offset: Dict[str, int] = {}     # trimmed diff-space prefix
@@ -97,56 +112,92 @@ class DiscordMonitor:
         # back-to-back scans with no new points don't re-sweep O(n^2)
         self._wrap_memo: Dict[str, Tuple[int, MonitorReport]] = {}
 
+    @property
+    def _streams(self) -> Dict[str, DiscordStream]:
+        """Compat view: each persistent metric's live stream (tenants
+        are owned by ``self.server``)."""
+        return {name: self.server._tenants[tid].stream
+                for name, tid in self._tenants.items()
+                if tid in self.server}
+
     # ------------------------------------------------------------------
     def _transformed(self, x: np.ndarray) -> np.ndarray:
         return np.diff(x) if self.difference else x
 
     def _forget(self, name: str) -> None:
-        for d in (self._streams, self._consumed, self._norm,
-                  self._offset):
+        tid = self._tenants.pop(name, None)
+        if tid is not None and tid in self.server:
+            self.server.close(tid)
+        for d in (self._consumed, self._norm, self._offset):
             d.pop(name, None)
 
-    def _seed_stream(self, x: np.ndarray) -> Tuple[DiscordStream, int,
-                                                   Tuple[float, float]]:
-        """Fresh stream over (at most) the trailing max_scan_points."""
-        x_scan = x[-self.max_scan_points:]
-        offset = x.shape[0] - x_scan.shape[0]   # == diff-space trim
-        t = self._transformed(x_scan)
-        loc = float(t.mean())
-        scale = float(max(t.std(), 1e-12))
-        stream = self.engine.open_stream(history=(t - loc) / scale)
-        return stream, offset, (loc, scale)
-
-    def _stream_for(self, name: str, x: np.ndarray
-                    ) -> Tuple[DiscordStream, int]:
-        """Persistent per-metric stream; appends only the new points.
+    def _prepare_metric(self, name: str, x: np.ndarray
+                        ) -> Tuple[str, int]:
+        """Queue this metric's pending stream work on the server and
+        return ``(tenant id, diff-space offset)`` — the device work
+        runs at the next ``server.flush()``, coalesced across metrics.
 
         Once the ring buffer wraps, the series stops being append-only
-        (old points retire), so the stream is rebuilt from the capped
-        visible window each scan — correctness first, incrementality
-        where the append-only precondition actually holds.
+        (old points retire), so the metric is re-served from an
+        *ephemeral* tenant over the capped visible window each scan —
+        correctness first, incrementality where the append-only
+        precondition actually holds.
         """
         wrapped = self.buffer.count(name) > self.buffer.capacity
-        stream = self._streams.get(name)
-        if wrapped or stream is None:
-            stream, offset, norm = self._seed_stream(x)
+        tid = self._tenants.get(name)
+        if wrapped or tid is None:
+            x_scan = x[-self.max_scan_points:]
+            offset = x.shape[0] - x_scan.shape[0]   # == diff-space trim
+            t = self._transformed(x_scan)
+            loc = float(t.mean())
+            scale = float(max(t.std(), 1e-12))
+            hist = (t - loc) / scale
             if wrapped:
                 self._forget(name)
+                tid = f"__wrap__::{name}::{self._wrap_seq}"
+                self._wrap_seq += 1
             else:
-                self._streams[name] = stream
+                tid = f"metric::{name}"
+                self._tenants[name] = tid
                 self._consumed[name] = x.shape[0]
-                self._norm[name] = norm
+                self._norm[name] = (loc, scale)
                 self._offset[name] = offset
-            return stream, offset
+            self.server.open(tid, self.spec, history=hist)
+            return tid, offset
         c = self._consumed[name]
         if x.shape[0] > c:
             # diff at the seam needs the previous raw point (c >= 1
             # after any first scan passed the min_points gate)
             new = np.diff(x[c - 1:]) if self.difference else x[c:]
             loc, scale = self._norm[name]
-            stream.append((new - loc) / scale)
+            self.server.append(tid, (new - loc) / scale)
             self._consumed[name] = x.shape[0]
-        return stream, self._offset[name]
+        return tid, self._offset[name]
+
+    def _finish_metric(self, name: str, tid: str, offset: int,
+                       wrapped: bool, total: int) -> MonitorReport:
+        """Build the report from the (already flushed) tenant stream;
+        ephemeral wrap tenants are released afterwards."""
+        stream = self.server.stream(tid)
+        prof = stream.profile()
+        body = prof[np.isfinite(prof)]
+        if body.size == 0:
+            report = MonitorReport(name, [], [], np.inf)
+        else:
+            med = float(np.median(body))
+            iqr = float(np.percentile(body, 75)
+                        - np.percentile(body, 25))
+            thr = med + self.z * max(iqr, 1e-12)
+            res = stream.discords(self.k)
+            positions = [p + offset for p in res.positions]
+            flagged = [p for p, v in zip(positions, res.nnds)
+                       if v > thr and p >= offset]
+            report = MonitorReport(name, positions, res.nnds, thr,
+                                   flagged)
+        if tid.startswith("__wrap__::"):
+            self.server.close(tid)
+            self._wrap_memo[name] = (total, report)
+        return report
 
     def scan_metric(self, name: str) -> Optional[MonitorReport]:
         x = self.buffer.series(name)
@@ -160,27 +211,35 @@ class DiscordMonitor:
             memo = self._wrap_memo.get(name)
             if memo is not None and memo[0] == total:
                 return memo[1]    # nothing new logged: skip the rebuild
-        stream, offset = self._stream_for(name, x)
-        prof = stream.profile()
-        body = prof[np.isfinite(prof)]
-        if body.size == 0:
-            return MonitorReport(name, [], [], np.inf)
-        med = float(np.median(body))
-        iqr = float(np.percentile(body, 75) - np.percentile(body, 25))
-        thr = med + self.z * max(iqr, 1e-12)
-        res = stream.discords(self.k)
-        positions = [p + offset for p in res.positions]
-        flagged = [p for p, v in zip(positions, res.nnds)
-                   if v > thr and p >= offset]
-        report = MonitorReport(name, positions, res.nnds, thr, flagged)
-        if wrapped:
-            self._wrap_memo[name] = (total, report)
-        return report
+        tid, offset = self._prepare_metric(name, x)
+        self.server.flush()
+        return self._finish_metric(name, tid, offset, wrapped, total)
 
     def scan(self) -> Dict[str, MonitorReport]:
-        out = {}
+        """Scan every metric: queue all deltas first, drain them in
+        **one** server flush (same-geometry metrics coalesce into
+        micro-batched dispatches), then assemble the reports."""
+        out: Dict[str, MonitorReport] = {}
+        staged = []
         for name in self.buffer.names():
-            rep = self.scan_metric(name)
-            if rep is not None:
-                out[name] = rep
+            x = self.buffer.series(name)
+            if x.shape[0] < max(self.min_points, 4 * self.window):
+                continue
+            if np.allclose(x, x[0]):
+                out[name] = MonitorReport(name, [], [], np.inf)
+                continue
+            total = self.buffer.count(name)
+            wrapped = total > self.buffer.capacity
+            if wrapped:
+                memo = self._wrap_memo.get(name)
+                if memo is not None and memo[0] == total:
+                    out[name] = memo[1]
+                    continue
+            tid, offset = self._prepare_metric(name, x)
+            staged.append((name, tid, offset, wrapped, total))
+        if staged:
+            self.server.flush()
+        for name, tid, offset, wrapped, total in staged:
+            out[name] = self._finish_metric(name, tid, offset, wrapped,
+                                            total)
         return out

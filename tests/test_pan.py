@@ -34,11 +34,12 @@
      exact across backends; engine rejections name the spec field.
 """
 import json
-import subprocess
-import sys
+import os
 
 import numpy as np
 import pytest
+
+from conftest import run_sharded_subprocess
 
 from repro.core import (DiscordEngine, PanResult, PanStream, SearchSpec,
                         find_discords)
@@ -533,9 +534,8 @@ print(json.dumps({
 """
 
 
-def test_pan_sharded_matches_local_and_compiles_once():
-    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
-                         capture_output=True, text=True, timeout=600)
+def test_pan_sharded_matches_local_and_compiles_once(run_sharded):
+    out = run_sharded(SHARDED_SCRIPT, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     rep = json.loads(out.stdout.strip().splitlines()[-1])
     assert rep["ndev"] == 4
@@ -602,14 +602,12 @@ print(json.dumps({
 """
 
 
-def test_pan_tail_sharded_matches_local_and_compiles_once():
+def test_pan_tail_sharded_matches_local_and_compiles_once(run_sharded):
     """4-device sharded pan stream + batched pan: parity with the
     local from-scratch ladder search, strictly-below-resweep append
     lanes, zero retrace on the second same-bucket append, and both
     two-level batched layouts."""
-    out = subprocess.run([sys.executable, "-c",
-                          PAN_TAIL_SHARDED_SCRIPT],
-                         capture_output=True, text=True, timeout=600)
+    out = run_sharded(PAN_TAIL_SHARDED_SCRIPT, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     rep = json.loads(out.stdout.strip().splitlines()[-1])
     assert rep["ndev"] == 4
@@ -623,6 +621,33 @@ def test_pan_tail_sharded_matches_local_and_compiles_once():
     assert rep["lb_ok"]
     assert rep["layouts"] == ["series-parallel", "pan-ring-per-series"]
     assert rep["batched_positions"] == rep["per_series_positions"]
+
+
+# ----------------------------------------------------------------------
+# the sharded-subprocess guard itself (PR 6 noted these tests deadlock
+# on single-CPU boxes: the forced-host-device collectives never
+# rendezvous; the conftest helper must bound or skip the mesh wait)
+# ----------------------------------------------------------------------
+def test_sharded_helper_skips_on_single_cpu(monkeypatch):
+    monkeypatch.setattr(os, "cpu_count", lambda: 1)
+    with pytest.raises(pytest.skip.Exception, match="single-CPU"):
+        run_sharded_subprocess("print('never runs')")
+
+
+def test_sharded_helper_bounds_the_mesh_wait(monkeypatch):
+    """A child that hangs past the timeout becomes a skip, not a hung
+    tier-1 run."""
+    monkeypatch.setattr(os, "cpu_count", lambda: 8)
+    with pytest.raises(pytest.skip.Exception, match="mesh"):
+        run_sharded_subprocess("import time; time.sleep(60)",
+                               timeout=2)
+
+
+def test_sharded_helper_returns_completed_process(monkeypatch):
+    monkeypatch.setattr(os, "cpu_count", lambda: 8)
+    out = run_sharded_subprocess("print(6 * 7)")
+    assert out.returncode == 0
+    assert out.stdout.strip() == "42"
 
 
 # ----------------------------------------------------------------------

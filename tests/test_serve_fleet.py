@@ -1,0 +1,424 @@
+"""Multi-tenant streaming serve plane (repro.serve.DiscordServer).
+
+  1. PARITY — micro-batched coalesced appends are **bit-identical**
+     (profiles and neighbor ids, every rung) to per-tenant sequential
+     appends, on mixed fleets of single-window and pan tenants.
+  2. SHARED CACHE — tenants with bucket-identical specs share one
+     engine and one plan cache; LRU eviction respects the budget and
+     moves the eviction counters without breaking parity.
+  3. ADMISSION — the pending queue is bounded; over-budget appends
+     raise AdmissionError loudly and the rejection is counted.
+  4. COMPILE-ONCE, FLEET-WIDE — steady-state flushes add zero jit
+     traces, and aggregate traces == aggregate plan builds.
+  5. TELEMETRY — ServeStats counters (dispatch ratio, hit rate,
+     straggler snapshot) are consistent; the DiscordMonitor rides a
+     shared server with the same reports it produced privately.
+  6. PROPERTY (seeded) — randomized fleets (mixed specs/ladders/znorm
+     modes, append sizes and order, tight budgets forcing mid-flight
+     evictions) keep the bit-identical parity contract on every
+     backend.  ``test_serve_property.py`` re-drives the same case
+     runner under hypothesis when it is installed.
+  7. SOAK (``-m slow``) — 1k tenants x 100 appends under a tight
+     cache budget: bounded cache, moving eviction counters, zero new
+     traces after warm-up, parity spot-checks.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DiscordEngine, PanStream, SearchSpec
+from repro.serve import AdmissionError, DiscordServer
+
+BACKENDS = ("numpy", "xla", "pallas")
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+def _series(rng, n):
+    x = np.sin(0.07 * np.arange(n)) + 0.15 * rng.normal(size=n)
+    if n > 120:
+        x[n // 2:n // 2 + 40] += 0.9
+    return x
+
+
+def _rungs(st):
+    return range(len(st.ladder)) if isinstance(st, PanStream) else (0,)
+
+
+def assert_stream_equal(st, ref, label=""):
+    """Bit-identical: d2 profile AND neighbor ids, every rung."""
+    assert type(st) is type(ref)
+    for r in _rungs(st):
+        if isinstance(st, PanStream):
+            p, q = st.profile(r), ref.profile(r)
+            n, m = st.neighbors(r), ref.neighbors(r)
+        else:
+            p, q = st.profile(), ref.profile()
+            n, m = st.neighbors(), ref.neighbors()
+        assert np.array_equal(p, q), f"{label}: profile rung {r}"
+        assert np.array_equal(n, m), f"{label}: neighbors rung {r}"
+
+
+def run_fleet_case(seed, backend, n_tenants=None):
+    """One randomized fleet served two ways — coalesced through a
+    DiscordServer vs per-tenant sequential streams — then compared
+    bit-identically.  Shared by the seeded property test here and the
+    hypothesis suite in test_serve_property.py."""
+    rng = np.random.default_rng(seed)
+    n_tenants = int(n_tenants or rng.integers(2, 6))
+    pool = [32, 64, (32, 48), (16, 32, 48)]
+    specs, histories, rounds = [], [], []
+    n_rounds = int(rng.integers(1, 4))
+    for t in range(n_tenants):
+        s = pool[int(rng.integers(len(pool)))]
+        specs.append(SearchSpec(s=s, k=2, method="matrix_profile",
+                                znorm=bool(rng.integers(2)),
+                                backend=backend))
+        histories.append(_series(rng, int(rng.integers(20, 400))))
+    for _ in range(n_rounds):
+        rounds.append([_series(rng, int(rng.integers(1, 120)))
+                       for _ in range(n_tenants)])
+    # a tight budget on some draws forces evictions mid-flight
+    budget = int(rng.integers(1, 4)) if rng.integers(2) else None
+
+    srv = DiscordServer(cache_budget=budget,
+                        max_group=int(rng.integers(2, 9)))
+    for t in range(n_tenants):
+        srv.open(t, specs[t], history=histories[t])
+    flush_every_round = bool(rng.integers(2))
+    for rnd in rounds:
+        for t in range(n_tenants):
+            srv.append(t, rnd[t])
+        if flush_every_round:
+            srv.flush()
+    srv.flush()
+
+    for t in range(n_tenants):
+        ref = DiscordEngine(specs[t]).open_stream(
+            history=histories[t])
+        for rnd in rounds:
+            ref.append(rnd[t])
+        assert_stream_equal(srv.stream(t), ref,
+                            f"seed={seed} tenant={t} "
+                            f"spec={specs[t]}")
+    st = srv.stats()
+    assert st.pending == 0
+    assert st.appends_applied == st.appends_queued
+    assert st.traces == st.plans, "fleet-wide compile-once broke"
+    if budget is not None:
+        assert len(srv.plan_cache) <= budget
+    return srv
+
+
+# ----------------------------------------------------------------------
+# 1. parity + coalescing on a deterministic mixed fleet
+# ----------------------------------------------------------------------
+def test_mixed_fleet_parity_and_coalescing():
+    rng = np.random.default_rng(0)
+    specs = [SearchSpec(s=64, k=2, method="matrix_profile",
+                        backend="xla"),
+             SearchSpec(s=(32, 48), k=2, method="matrix_profile",
+                        backend="xla")]
+    hist = [_series(rng, 300) for _ in range(8)]
+    apps = [[_series(rng, 40) for _ in range(8)] for _ in range(4)]
+
+    srv = DiscordServer()
+    for t in range(8):
+        srv.open(t, specs[t % 2], history=hist[t])
+    for rnd in apps:
+        for t in range(8):
+            srv.append(t, rnd[t])
+        srv.flush()
+
+    for t in range(8):
+        ref = DiscordEngine(specs[t % 2]).open_stream(history=hist[t])
+        for rnd in apps:
+            ref.append(rnd[t])
+        assert_stream_equal(srv.stream(t), ref, f"tenant {t}")
+        # discord queries ride the same folded state
+        got, want = srv.discords(t), ref.discords()
+        if t % 2:      # pan tenant: per-rung results
+            assert [r.positions for r in got.per_rung] == \
+                [r.positions for r in want.per_rung]
+        else:
+            assert got.positions == want.positions
+
+    st = srv.stats()
+    assert st.tenants == 8 and st.engines == 2
+    # 8 tenants x 3 rounds sequential, but 4-lane coalescing per spec:
+    # the dispatch ratio is the micro-batching win
+    assert st.coalesced > 0
+    assert st.dispatches < st.sequential_dispatches
+    assert st.dispatch_ratio < 0.5
+    assert st.cache_hit_rate > 0.5, \
+        "bucket-identical tenants must share compilations"
+
+
+def test_queued_appends_apply_in_arrival_order():
+    """server.append(t, p1); append(t, p2); flush() must equal
+    stream.append(p1).append(p2) — the flush-rounds contract."""
+    rng = np.random.default_rng(1)
+    spec = SearchSpec(s=32, k=2, method="matrix_profile",
+                      backend="numpy")
+    h, p1, p2, p3 = (_series(rng, n) for n in (200, 30, 45, 7))
+    srv = DiscordServer()
+    srv.open("a", spec, history=h)
+    srv.append("a", p1)
+    srv.append("a", p2)
+    srv.append("a", p3)
+    assert srv.stats().pending == 4    # history queues like an append
+    rounds = srv.flush()
+    assert rounds == 4, "one pending append per tenant per round"
+    ref = DiscordEngine(spec).open_stream(history=h)
+    ref.append(p1).append(p2).append(p3)
+    assert_stream_equal(srv.stream("a"), ref)
+
+
+# ----------------------------------------------------------------------
+# 2. shared plan cache + eviction
+# ----------------------------------------------------------------------
+def test_engines_dedupe_and_share_one_cache():
+    spec = SearchSpec(s=64, k=2, method="matrix_profile",
+                      backend="numpy")
+    other = SearchSpec(s=32, k=2, method="matrix_profile",
+                       backend="numpy")
+    srv = DiscordServer()
+    srv.open("a", spec)
+    srv.open("b", spec)
+    srv.open("c", other)
+    ea, eb = (srv._tenants[t].stream.engine for t in "ab")
+    ec = srv._tenants["c"].stream.engine
+    assert ea is eb, "bucket-identical specs must share the engine"
+    assert ec is not ea
+    assert ea.plan_cache is ec.plan_cache is srv.plan_cache
+    assert srv.stats().engines == 2
+
+
+def test_cache_eviction_under_budget_keeps_parity():
+    rng = np.random.default_rng(2)
+    specs = [SearchSpec(s=s, k=2, method="matrix_profile",
+                        backend="numpy") for s in (16, 32, 64)]
+    hist = [_series(rng, 260) for _ in specs]
+    app = [_series(rng, 50) for _ in specs]
+
+    srv = DiscordServer(cache_budget=1)
+    for t, spec in enumerate(specs):
+        srv.open(t, spec, history=hist[t])
+    for t in range(len(specs)):
+        srv.append(t, app[t])
+    srv.flush()
+
+    cache = srv.plan_cache.as_dict()
+    assert len(srv.plan_cache) <= 1, "budget must bound live plans"
+    assert cache["evictions"] > 0, "three geometries through a " \
+                                   "1-plan budget must evict"
+    for t, spec in enumerate(specs):
+        ref = DiscordEngine(spec).open_stream(history=hist[t])
+        ref.append(app[t])
+        assert_stream_equal(srv.stream(t), ref, f"tenant {t}")
+
+
+def test_compile_once_fleet_wide_steady_state():
+    """Once every (geometry, lane-count) plan is warm, further flush
+    rounds add zero jit traces."""
+    rng = np.random.default_rng(3)
+    spec = SearchSpec(s=32, k=2, method="matrix_profile",
+                      backend="xla")
+    srv = DiscordServer()
+    for t in range(4):
+        # 150 + 5 appends x 16 = 230 stays inside the 256 bucket, so
+        # steady state really is one (geometry, B) plan key
+        srv.open(t, spec, history=_series(rng, 150))
+    for _ in range(2):                      # warm-up: fill + tail
+        for t in range(4):
+            srv.append(t, _series(rng, 16))
+        srv.flush()
+    warm = srv.stats().traces
+    for _ in range(3):                      # steady state, same bucket
+        for t in range(4):
+            srv.append(t, _series(rng, 16))
+        srv.flush()
+    st = srv.stats()
+    assert st.traces == warm, "steady-state flushes must not retrace"
+    assert st.traces == st.plans
+
+
+# ----------------------------------------------------------------------
+# 3. admission control + tenancy lifecycle
+# ----------------------------------------------------------------------
+def test_admission_bounded_queue_rejects_loudly():
+    rng = np.random.default_rng(4)
+    srv = DiscordServer(max_pending=3)
+    srv.open("a", s=32, k=2, method="matrix_profile", backend="numpy")
+    for _ in range(3):
+        srv.append("a", _series(rng, 40))
+    with pytest.raises(AdmissionError, match="max_pending"):
+        srv.append("a", _series(rng, 40))
+    assert srv.stats().rejected == 1
+    assert srv.stats().pending == 3, "rejected append must not queue"
+    srv.flush()                             # draining re-admits
+    srv.append("a", _series(rng, 40))
+    srv.flush()
+    assert srv.stats().pending == 0
+
+
+def test_tenancy_lifecycle_and_argument_errors():
+    rng = np.random.default_rng(5)
+    spec = SearchSpec(s=32, k=2, method="matrix_profile",
+                      backend="numpy")
+    srv = DiscordServer()
+    srv.open("a", spec, history=_series(rng, 150))
+    with pytest.raises(ValueError, match="already open"):
+        srv.open("a", spec)
+    with pytest.raises(TypeError, match="not both"):
+        srv.open("b", spec, s=64)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        srv.append("ghost", np.zeros(8))
+    # empty appends are no-ops, not queue slots
+    srv.flush()                             # drain the queued history
+    srv.append("a", [])
+    assert srv.stats().pending == 0
+
+    srv.append("a", _series(rng, 30))
+    stream = srv.close("a")                 # applies pending first
+    assert stream.n_points == 180
+    assert "a" not in srv and len(srv) == 0
+    with pytest.raises(KeyError):
+        srv.stream("a")
+
+
+def test_sharded_specs_are_rejected_with_pointer():
+    srv = DiscordServer()
+    with pytest.raises(ValueError, match="non-sharded"):
+        srv.open("a", SearchSpec(s=64, k=2, method="matrix_profile",
+                                 backend="xla", ndev=2))
+
+
+def test_profile_rung_validation():
+    rng = np.random.default_rng(6)
+    srv = DiscordServer()
+    srv.open("flat", s=32, k=2, method="matrix_profile",
+             backend="numpy", history=_series(rng, 200))
+    srv.open("pan", s=(16, 32), k=2, method="matrix_profile",
+             backend="numpy", history=_series(rng, 200))
+    assert srv.profile("flat").size > 0
+    assert srv.profile("pan", rung=1).size > 0
+    with pytest.raises(ValueError, match="rung"):
+        srv.profile("flat", rung=1)
+
+
+# ----------------------------------------------------------------------
+# 4. telemetry: stats shape, straggler wiring, monitor rides the fleet
+# ----------------------------------------------------------------------
+def test_stats_report_shape_and_repr():
+    srv = DiscordServer(cache_budget=8)
+    rep = srv.report()
+    for key in ("tenants", "engines", "dispatches",
+                "sequential_dispatches", "dispatch_ratio", "cache",
+                "pending", "rejected", "straggler"):
+        assert key in rep
+    assert rep["cache"]["budget"] == 8
+    assert "DiscordServer(" in repr(srv)
+    assert srv.stats().dispatch_ratio == 0.0    # no dispatches yet
+
+
+def test_straggler_detector_observes_plan_groups():
+    rng = np.random.default_rng(7)
+    srv = DiscordServer(straggler_slots=2)
+    for t in range(4):
+        srv.open(t, s=32, k=2, method="matrix_profile",
+                 backend="numpy", history=_series(rng, 200))
+    srv.flush()
+    snap = srv.stats().straggler
+    assert snap is not None
+    assert set(snap) == {"suspects", "evict", "cross_sectional",
+                         "temporal"}
+
+
+def test_monitor_rides_shared_server():
+    from repro.telemetry.buffer import MetricBuffer
+    from repro.telemetry.monitor import DiscordMonitor
+
+    rng = np.random.default_rng(8)
+    x = 0.1 * rng.normal(size=400)
+    x[250:270] += 3.0
+
+    def fill(buf):
+        for i, v in enumerate(x):
+            buf.log(i, {"loss": float(v), "grad": float(v) * 0.5})
+
+    srv = DiscordServer()
+    buf1 = MetricBuffer()
+    fill(buf1)
+    shared = DiscordMonitor(buf1, window=32, min_points=64,
+                            server=srv)
+    got = shared.scan()
+
+    buf2 = MetricBuffer()
+    fill(buf2)
+    private = DiscordMonitor(buf2, window=32, min_points=64)
+    want = private.scan()
+
+    assert set(got) == set(want) == {"loss", "grad"}
+    for name in got:
+        assert got[name].positions == want[name].positions
+        assert got[name].flagged == want[name].flagged
+    # the metrics really are tenants of the caller's server
+    assert len(srv) == 2
+    assert all(t.startswith("metric::") for t in srv.tenant_ids)
+    assert srv.stats().coalesced > 0, \
+        "same-geometry metrics must micro-batch in one scan flush"
+
+
+# ----------------------------------------------------------------------
+# 6. seeded property suite (hypothesis re-drives run_fleet_case when
+#    installed — see test_serve_property.py)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", [11, 12, 13])
+def test_property_random_fleet_parity(backend, seed):
+    run_fleet_case(seed, backend)
+
+
+# ----------------------------------------------------------------------
+# 7. soak (slow; own CI job): 1k tenants x 100 appends, tight budget
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_soak_1k_tenants_bounded_cache_and_no_retrace():
+    rng = np.random.default_rng(9)
+    spec = SearchSpec(s=16, k=2, method="matrix_profile",
+                      backend="xla")
+    n_tenants, n_appends, app = 1000, 100, 8
+    srv = DiscordServer(cache_budget=3, max_group=64)
+    hist = [_series(rng, 64) for _ in range(n_tenants)]
+    apps = rng.normal(size=(n_appends, n_tenants, app))
+    for t in range(n_tenants):
+        srv.open(t, spec, history=hist[t])
+    traces_at = {}
+    for i in range(n_appends):
+        for t in range(n_tenants):
+            srv.append(t, apps[i, t])
+        srv.flush()
+        if i in (n_appends - 21, n_appends - 1):
+            traces_at[i] = srv.stats().traces
+
+    st = srv.stats()
+    # bounded compile memory: the live cache respects the budget and
+    # the eviction counters moved while the series crossed buckets
+    assert len(srv.plan_cache) <= 3
+    assert st.cache["evictions"] > 0
+    # zero new jit traces after warm-up (last 20 rounds are steady)
+    assert traces_at[n_appends - 1] == traces_at[n_appends - 21], \
+        "steady-state soak rounds must not retrace"
+    assert st.traces == st.plans
+    assert st.pending == 0
+    assert st.appends_applied == st.appends_queued == \
+        n_tenants * (n_appends + 1)
+    assert st.dispatch_ratio < 0.5
+    assert st.cache_hit_rate > 0.9
+    # parity spot-checks against sequential sessions
+    for t in (0, 499, 999):
+        ref = DiscordEngine(spec).open_stream(history=hist[t])
+        for i in range(n_appends):
+            ref.append(apps[i, t])
+        assert_stream_equal(srv.stream(t), ref, f"soak tenant {t}")

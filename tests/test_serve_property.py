@@ -1,0 +1,27 @@
+"""Hypothesis property suite for the serve plane's parity contract.
+
+Drives the same randomized-fleet case runner as
+``test_serve_fleet.py`` (mixed specs, ladders, znorm modes, append
+sizes and order, tight cache budgets forcing mid-flight evictions),
+but lets hypothesis explore and shrink the seed space.  Skipped
+cleanly when hypothesis is not installed — the seeded parametrized
+variant in test_serve_fleet.py still covers every backend there.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings      # noqa: E402
+from hypothesis import strategies as st                  # noqa: E402
+
+from test_serve_fleet import BACKENDS, run_fleet_case    # noqa: E402
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+       backend=st.sampled_from(BACKENDS))
+def test_fleet_parity_property(seed, backend):
+    """Micro-batched coalesced appends are bit-identical to
+    per-tenant sequential appends for arbitrary fleets."""
+    run_fleet_case(seed, backend)

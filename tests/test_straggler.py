@@ -1,0 +1,93 @@
+"""StragglerDetector coverage (telemetry/straggler.py).
+
+Three behaviours, one per detector path plus the merge:
+
+  * HARD — a host 2.5x over fleet median is caught by the
+    cross-sectional path immediately and evicted after ``patience``
+    consecutive strikes; a single recovered step clears the strikes.
+  * INTERMITTENT — a host whose slow burst stays *below* the
+    cross-sectional ratio (1.4x on ratio=1.5) but is a step-time
+    discord relative to its own history is caught by the temporal
+    (HST monitor) path once the buffer passes the 64-point gate.
+  * NO FALSE POSITIVES — a homogeneous fleet with normal noise never
+    accumulates strikes on either path.
+"""
+import numpy as np
+
+from repro.telemetry.straggler import StragglerDetector
+
+
+def _log_fleet(det, times):
+    """times: (steps, hosts) array; logs every row."""
+    for step, row in enumerate(times):
+        det.log_step(step, row)
+
+
+def test_hard_straggler_cross_sectional_and_eviction():
+    n_hosts, bad = 8, 3
+    det = StragglerDetector(n_hosts, ratio=1.5, patience=2)
+    rng = np.random.default_rng(0)
+
+    t = 0.100 + 0.002 * rng.normal(size=(6, n_hosts))
+    t[:, bad] *= 2.5
+    _log_fleet(det, t[:2])
+
+    assert det.cross_sectional() == [bad]
+    d1 = det.decide()
+    assert d1["cross_sectional"] == [bad]
+    assert d1["suspects"] == [bad]
+    assert d1["evict"] == [], "one strike is below patience=2"
+
+    det.log_step(2, t[2])
+    d2 = det.decide()
+    assert d2["evict"] == [bad], "second consecutive strike evicts"
+
+    # a recovered step resets the strike counter: no lingering eviction
+    det.log_step(3, np.full(n_hosts, 0.100))
+    d3 = det.decide()
+    assert d3["suspects"] == [] and d3["evict"] == []
+
+
+def test_intermittent_straggler_temporal_path():
+    """A 1.4x burst buried in history: invisible cross-sectionally
+    (latest step is healthy, and 1.4 < ratio), but an extreme discord
+    in the host's own step-time series."""
+    n_hosts, bad, steps = 4, 2, 200
+    det = StragglerDetector(n_hosts, ratio=1.5, patience=1)
+    rng = np.random.default_rng(1)
+
+    t = 0.100 + 0.0005 * rng.normal(size=(steps, n_hosts))
+    t[120:140, bad] *= 1.4
+    _log_fleet(det, t)
+
+    assert det.cross_sectional() == [], \
+        "burst is over and 1.4x never crossed the 1.5x ratio"
+    assert det.temporal() == [bad]
+    d = det.decide()
+    assert d["temporal"] == [bad]
+    assert d["cross_sectional"] == []
+    assert d["evict"] == [bad]
+
+
+def test_temporal_path_gated_until_64_points():
+    """decide() must not consult the O(n^2) temporal path before the
+    buffer has 64 steps — even if a burst is already present."""
+    det = StragglerDetector(2, patience=1)
+    rng = np.random.default_rng(2)
+    t = 0.100 + 0.0005 * rng.normal(size=(40, 2))
+    t[20:30, 1] *= 1.4
+    _log_fleet(det, t)
+    d = det.decide()
+    assert d["temporal"] == [] and d["evict"] == []
+
+
+def test_homogeneous_fleet_no_false_positives():
+    n_hosts, steps = 6, 160
+    det = StragglerDetector(n_hosts, ratio=1.5, patience=1)
+    rng = np.random.default_rng(3)
+    _log_fleet(det, 0.100 + 0.003 * rng.normal(size=(steps, n_hosts)))
+
+    d = det.decide()
+    assert d["suspects"] == []
+    assert d["evict"] == []
+    assert not det._strikes.any()
