@@ -1,19 +1,31 @@
-"""Plan-integrity analyzer: AST lint, spec-key audit, pad sanitizer.
+"""Plan-integrity analyzer: AST lint, spec-key audit, pad sanitizer,
+jaxpr IR audit, f64 shadow numerics.
 
-Three passes over the engine + kernel layers (``python -m
+Five passes over the engine + kernel layers (``python -m
 repro.analysis``; rule catalogue and report schema in
 docs/analysis.md):
 
 * ``lint`` — jax-free AST rules: tile-math containment, no host sync
-  in plan bodies, f32-only kernels, no untracked ``jax.jit``.
+  in plan bodies or serve/telemetry dispatch paths, f32-only kernels,
+  no untracked ``jax.jit``.
 * ``speckey`` — SearchSpec fields vs plan-cache keys: a static
   cross-reference plus a property-based runtime perturbation check.
 * ``sanitize`` — NaN/±inf pad-lane canaries through every plan kind,
   asserting bit-identical results vs benign padding.
+* ``irlint`` — abstract ``jax.make_jaxpr`` trace of every registered
+  plan kind (``core.engine.plan_kind_registry``): no f64 in the IR,
+  every ``dot_general`` pins an f32 accumulator, host callbacks only
+  in numpy-backend plans, no oversized baked constants, and a static
+  FLOP/lane model cross-checked against the runtime ``tile_lanes``
+  accounting.
+* ``shadow`` — f64 reference replay of every plan kind on a
+  conditioning-hostile series: top-k stability (regret gate) + nnd
+  divergence, with worst-case rel-err/ULP/margin in the report.
 
 Importing this package (and running lint + the static speckey audit)
 must never initialize jax — the runtime halves (:func:`runtime_audit`,
-:mod:`.sanitize`) import it lazily inside their functions.
+:mod:`.sanitize`, :mod:`.irlint`, :mod:`.shadow`) import it lazily
+inside their functions.
 """
 from .lint import RULES, lint_source, run_lint
 from .report import Finding, REPORT_VERSION, report_dict, write_report

@@ -4,20 +4,28 @@ Runs the requested passes, prints every finding, writes the JSON
 report artifact and exits non-zero on any finding (the CI ``analysis``
 job gates on this; schema in docs/analysis.md).
 
-``lint`` and ``speckey --static-only`` stay jax-free; ``sanitize``
-and the speckey runtime audit build real (tiny) engines.
+``lint`` and ``speckey --static-only`` stay jax-free; ``sanitize``,
+``irlint``, ``shadow`` and the speckey runtime audit build real
+(tiny) engines — ``irlint`` only abstractly traces them (no
+execution), ``sanitize``/``shadow`` replay them.
+
+The whole run is held to a wall-clock budget (``--budget-s``,
+default 120 s): the analyzer gates every PR, so it getting slow is
+itself a finding.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-from typing import List
+import time
+from typing import Dict, List
 
 from .lint import run_lint
 from .report import Finding, print_findings, write_report
 from .speckey import coverage, static_audit
 
-PASSES = ("all", "lint", "speckey", "sanitize")
+PASSES = ("all", "lint", "speckey", "sanitize", "irlint", "shadow")
+DEFAULT_BUDGET_S = 120.0
 
 
 def _parse_args(argv):
@@ -25,7 +33,8 @@ def _parse_args(argv):
         prog="python -m repro.analysis",
         description="Plan-integrity analyzer (docs/analysis.md): AST "
                     "lint, SearchSpec plan-key audit, padding-poison "
-                    "sanitizer.  Exits 1 on any finding.")
+                    "sanitizer, jaxpr IR audit, f64 shadow-numerics "
+                    "replay.  Exits 1 on any finding.")
     p.add_argument("passes", nargs="*", metavar="pass",
                    help=f"passes to run, from {PASSES} "
                         "(default: all)")
@@ -37,15 +46,21 @@ def _parse_args(argv):
                    help="speckey: skip the runtime perturbation audit "
                         "(keeps the pass jax-free)")
     p.add_argument("--backends", default="numpy,xla,pallas",
-                   help="sanitize: comma-separated tile backends "
-                        "(default: %(default)s)")
+                   help="sanitize/irlint/shadow: comma-separated tile "
+                        "backends (default: %(default)s)")
     p.add_argument("--znorm", default="both",
                    choices=("both", "true", "false"),
-                   help="sanitize: distance modes to poison "
+                   help="sanitize/shadow: distance modes "
                         "(default: both)")
     p.add_argument("--kinds", default="all",
-                   help="sanitize: comma-separated plan kinds "
+                   help="sanitize/shadow (result kinds) and irlint "
+                        "(plan kinds): comma-separated subset "
                         "(default: all registered kinds)")
+    p.add_argument("--budget-s", type=float, default=DEFAULT_BUDGET_S,
+                   metavar="SECONDS",
+                   help="wall-clock budget for the whole run; "
+                        "overrunning it is a finding (0 disables; "
+                        "default: %(default)s)")
     return p.parse_args(argv)
 
 
@@ -58,32 +73,69 @@ def main(argv=None) -> int:
         return 2
     want = set(args.passes or ["all"])
     if "all" in want:
-        want = {"lint", "speckey", "sanitize"}
+        want = {"lint", "speckey", "sanitize", "irlint", "shadow"}
+    t0 = time.monotonic()
     findings: List[Finding] = []
+    counts: Dict[str, Dict] = {}
     meta: dict = {"passes": sorted(want)}
+    kind_arg = (None if args.kinds == "all"
+                else tuple(k for k in args.kinds.split(",") if k))
+    znorms = {"both": (True, False), "true": (True,),
+              "false": (False,)}[args.znorm]
+    backends = tuple(b for b in args.backends.split(",") if b)
 
     if "lint" in want:
-        findings.extend(run_lint())
+        counts["lint"] = {}
+        findings.extend(run_lint(counts=counts["lint"]))
     if "speckey" in want:
         findings.extend(static_audit())
-        meta["speckey_coverage"] = coverage()
+        cov = coverage()
+        meta["speckey_coverage"] = cov
+        counts["speckey"] = {"fields": len(cov),
+                             "runtime": not args.static_only}
         if not args.static_only:
             from .speckey import runtime_audit
             findings.extend(runtime_audit())
     if "sanitize" in want:
-        from .sanitize import ALL_KINDS, run_sanitizer
-        kinds = (ALL_KINDS if args.kinds == "all"
-                 else tuple(k for k in args.kinds.split(",") if k))
-        znorms = {"both": (True, False), "true": (True,),
-                  "false": (False,)}[args.znorm]
-        backends = tuple(b for b in args.backends.split(",") if b)
+        from .sanitize import ALL_KINDS, CANARIES, run_sanitizer
+        kinds = kind_arg if kind_arg is not None else ALL_KINDS
         sfind, checked = run_sanitizer(backends=backends,
                                        znorms=znorms, kinds=kinds)
         findings.extend(sfind)
         meta["sanitize_checked"] = checked
+        counts["sanitize"] = {"cells": len(checked),
+                              "canaries": len(CANARIES)}
+    if "irlint" in want:
+        from .irlint import run_irlint
+        ifind, imeta = run_irlint(backends=backends, kinds=kind_arg)
+        findings.extend(ifind)
+        meta["irlint"] = imeta
+        counts["irlint"] = {"kinds": len(imeta.get("kinds", ())),
+                            "cells": len(imeta.get("checked", ()))}
+    if "shadow" in want:
+        from .sanitize import ALL_KINDS
+        from .shadow import run_shadow
+        kinds = kind_arg if kind_arg is not None else ALL_KINDS
+        hfind, hmeta = run_shadow(backends=backends, znorms=znorms,
+                                  kinds=kinds)
+        findings.extend(hfind)
+        meta["shadow"] = hmeta
+        counts["shadow"] = {"kinds": len(hmeta.get("worst_by_kind",
+                                                   ())),
+                            "cells": len(hmeta.get("checked", ()))}
+
+    elapsed = time.monotonic() - t0
+    meta["elapsed_s"] = round(elapsed, 3)
+    if args.budget_s and elapsed > args.budget_s:
+        findings.append(Finding(
+            "budget", "wall-clock", "/".join(sorted(want)), 0,
+            f"analyzer took {elapsed:.1f} s > budget "
+            f"{args.budget_s:.0f} s — it gates every PR, keep it "
+            "cheap (trim cells or raise --budget-s deliberately)"))
+        counts["budget"] = {"budget_s": args.budget_s}
 
     if args.report != "-":
-        write_report(args.report, findings, meta)
+        write_report(args.report, findings, meta, counts)
         meta_note = f" (report: {args.report})"
     else:
         meta_note = ""
@@ -92,8 +144,8 @@ def main(argv=None) -> int:
         print(f"repro.analysis: {len(findings)} finding(s) across "
               f"{'/'.join(sorted(want))}{meta_note}", file=sys.stderr)
         return 1
-    print(f"repro.analysis: OK — {'/'.join(sorted(want))} passed"
-          f"{meta_note}")
+    print(f"repro.analysis: OK — {'/'.join(sorted(want))} passed in "
+          f"{elapsed:.1f}s{meta_note}")
     return 0
 
 

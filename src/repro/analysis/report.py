@@ -1,9 +1,10 @@
 """Findings + JSON report for the plan-integrity analyzer.
 
-One small value type (:class:`Finding`) is shared by every pass (lint,
-speckey, sanitize) so ``python -m repro.analysis`` can gate its exit
-code on a single list and serialize one ``ANALYSIS_REPORT.json``
-artifact (docs/analysis.md has the schema).
+One small value type (:class:`Finding`) is shared by every pass
+(lint, speckey, sanitize, irlint, shadow) so ``python -m
+repro.analysis`` can gate its exit code on a single list and
+serialize one ``ANALYSIS_REPORT.json`` artifact (docs/analysis.md
+has the schema).
 
 Deliberately dependency-free (stdlib only): the lint and static
 speckey passes must run on a CPU-only box without initializing jax.
@@ -16,15 +17,15 @@ from typing import Dict, List, Optional, Sequence
 
 __all__ = ["Finding", "report_dict", "write_report", "REPORT_VERSION"]
 
-REPORT_VERSION = 1
+REPORT_VERSION = 2
 
 
 @dataclass
 class Finding:
     """One analyzer finding (any pass)."""
-    pass_name: str      # "lint" | "speckey" | "sanitize"
+    pass_name: str      # "lint" | "speckey" | "sanitize" | "irlint" | "shadow"
     rule: str           # rule / check identifier (kebab-case)
-    path: str           # file (lint/speckey) or plan-kind locus (sanitize)
+    path: str           # file (lint/speckey) or plan-kind locus (others)
     line: int           # 1-based source line; 0 when not applicable
     message: str
 
@@ -34,11 +35,22 @@ class Finding:
 
 
 def report_dict(findings: Sequence[Finding],
-                meta: Optional[Dict] = None) -> Dict:
-    """The report document: stable schema, ok == no findings."""
-    counts: Dict[str, int] = {}
+                meta: Optional[Dict] = None,
+                counts: Optional[Dict[str, Dict]] = None) -> Dict:
+    """The report document: stable schema, ok == no findings.
+
+    ``counts`` carries each executed pass's coverage numbers (what
+    was checked — files, rules, kinds, cells), keyed by pass name; a
+    pass that ran is present even with zero findings, so a clean
+    report still proves scope.  Finding totals are folded in as each
+    pass's ``findings`` entry.  Key order is not semantic: the writer
+    sorts keys so the artifact diffs deterministically."""
+    counts = {name: dict(vals) for name, vals in (counts or {}).items()}
     for f in findings:
-        counts[f.pass_name] = counts.get(f.pass_name, 0) + 1
+        entry = counts.setdefault(f.pass_name, {})
+        entry["findings"] = entry.get("findings", 0) + 1
+    for entry in counts.values():
+        entry.setdefault("findings", 0)
     return {
         "version": REPORT_VERSION,
         "tool": "repro.analysis",
@@ -50,9 +62,10 @@ def report_dict(findings: Sequence[Finding],
 
 
 def write_report(path: str, findings: Sequence[Finding],
-                 meta: Optional[Dict] = None) -> Dict:
+                 meta: Optional[Dict] = None,
+                 counts: Optional[Dict[str, Dict]] = None) -> Dict:
     """Serialize the report to ``path``; returns the document."""
-    doc = report_dict(findings, meta)
+    doc = report_dict(findings, meta, counts)
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=2, sort_keys=True)
         fh.write("\n")

@@ -143,49 +143,48 @@ class _Context:
         self._engines[key] = eng
         return eng
 
-    # one driver per plan kind; each returns a result signature
-    def run(self, kind: str) -> tuple:
+    # one driver per plan kind; each returns the raw result object(s)
+    def _run_raw(self, kind: str):
         import numpy as np
         x, y, at = self.x, self.y, self.tail_at
         stack = np.stack([x, y])
         if kind == "profile":
-            return _result_sig(self._engine("mp").search(x))
+            return self._engine("mp").search(x)
         if kind == "batched":
-            return _result_sig(self._engine("mp").search_batched(stack))
+            return self._engine("mp").search_batched(stack)
         if kind == "tail":
             st = self._engine("mp").open_stream(s=self.s,
                                                 history=x[:at])
-            return _result_sig(st.append(x[at:]).discords())
+            return st.append(x[at:]).discords()
         if kind == "pan":
-            return _result_sig(self._engine("pan").search_pan(x))
+            return self._engine("pan").search_pan(x)
         if kind == "pan_lb":
-            return _result_sig(
-                self._engine("pan").search_pan(x, schedule="lb"))
+            return self._engine("pan").search_pan(x, schedule="lb")
         if kind == "pan_tail":
             st = self._engine("pan").open_stream(history=x[:at])
-            return _result_sig(st.append(x[at:]).discords())
+            return st.append(x[at:]).discords()
         if kind == "pan_batched":
-            return _result_sig(
-                self._engine("pan").search_batched(stack))
+            return self._engine("pan").search_batched(stack)
         if kind == "ring":
-            return _result_sig(self._engine("ring").search(x))
+            return self._engine("ring").search(x)
         if kind == "batched_ring":
-            return _result_sig(
-                self._engine("mp_ndev").search_batched(stack))
+            return self._engine("mp_ndev").search_batched(stack)
         if kind == "tail_ring":
             st = self._engine("mp_ndev").open_stream(s=self.s,
                                                      history=x[:at])
-            return _result_sig(st.append(x[at:]).discords())
+            return st.append(x[at:]).discords()
         if kind == "pan_ring":
-            return _result_sig(self._engine("pan_ndev").search_pan(x))
+            return self._engine("pan_ndev").search_pan(x)
         if kind == "pan_tail_ring":
             st = self._engine("pan_ndev").open_stream(history=x[:at])
-            return _result_sig(st.append(x[at:]).discords())
+            return st.append(x[at:]).discords()
         if kind == "pan_batched_ring":
-            return _result_sig(
-                self._engine("pan_ndev").search_batched(stack))
+            return self._engine("pan_ndev").search_batched(stack)
         raise ValueError(f"unknown plan kind {kind!r} "
                          f"(known: {ALL_KINDS})")
+
+    def run(self, kind: str) -> tuple:
+        return _result_sig(self._run_raw(kind))
 
 
 def _sanitize_ctx(ctx: _Context, kinds: Sequence[str],

@@ -112,7 +112,9 @@ from .tiles import TileEngine, exact_pair_d2, topk_nonoverlapping
 from .windows import sliding_stats
 
 __all__ = ["DiscordEngine", "DiscordStream", "PanStream", "EngineStats",
-           "PlanCache", "ring_series_threshold", "PLAN_KEY_FIELDS",
+           "PlanCache", "PlanKindAudit", "plan_kind_registry",
+           "plan_pad_geom", "plan_shard_geom", "plan_pan_row_geom",
+           "ring_series_threshold", "PLAN_KEY_FIELDS",
            "KIND_DISPATCH_FIELDS", "TRACE_INVARIANT_FIELDS"]
 
 # -- SearchSpec keying contract (audited by repro.analysis.speckey) ----
@@ -133,6 +135,38 @@ TRACE_INVARIANT_FIELDS = ("k", "P", "alpha", "seed", "r")
 #: repro.analysis.sanitize proves that by swapping in NaN/±inf
 #: canaries and asserting bit-identical top-k.
 PAD_FILL = 0.0
+
+
+def plan_pad_geom(s: int, Lb: int, block: int) -> int:
+    """Padded window count of a bucket-``Lb`` sweep at window ``s`` —
+    the tile-grid geometry every local plan builder keys on.  Module
+    level (not a method) so the IR auditor's static lane model
+    (``repro.analysis.irlint``) derives its expectations from the
+    same arithmetic the builders use."""
+    return ceil_div(Lb - s + 1, block) * block
+
+
+def plan_shard_geom(s: int, Lb: int, block: int,
+                    ndev: int) -> Tuple[int, int, int]:
+    """Window-count geometry of a sharded bucket-``Lb`` sweep:
+    ``(n_pad, per, n_sh)`` where ``n_pad`` is the tile grid's own
+    padded window count, ``per`` the per-device shard (rounded up to a
+    multiple of ``block`` so shards stay MXU-aligned), and
+    ``n_sh = per * ndev`` the mesh-wide padded count."""
+    n_pad = plan_pad_geom(s, Lb, block)
+    per = ceil_div(n_pad // block, ndev) * block
+    return n_pad, per, per * ndev
+
+
+def plan_pan_row_geom(ladder, Lb: int, block: int,
+                      ndev: int) -> Tuple[int, int]:
+    """Query-row geometry of a pan sweep: ``(n_pad, nb_p)`` where
+    ``n_pad`` is the base-rung padded window count and ``nb_p`` the
+    query block count padded to a device multiple (1 device = no
+    padding)."""
+    n_pad = plan_pad_geom(ladder[0], Lb, block)
+    nb = n_pad // block
+    return n_pad, ceil_div(nb, ndev) * ndev
 
 
 def _bucket_pad(x, Lb: int, rows: Optional[int] = None) -> np.ndarray:
@@ -338,7 +372,7 @@ class DiscordEngine:
     # -- plan cache ----------------------------------------------------
     def _n_pad(self, s: int, Lb: int) -> int:
         """Padded window count of bucket ``Lb`` (tile geometry)."""
-        return ceil_div(Lb - s + 1, self.spec.block) * self.spec.block
+        return plan_pad_geom(s, Lb, self.spec.block)
 
     def _plan_key(self, key):
         """Full cache key of a plan: the session-invariant spec prefix
@@ -563,9 +597,7 @@ class DiscordEngine:
         padded window count, ``per`` the per-device shard (rounded up
         to a multiple of ``spec.block`` so shards stay MXU-aligned),
         and ``n_sh = per * ndev`` the mesh-wide padded count."""
-        n_pad = self._n_pad(s, Lb)
-        per = ceil_div(n_pad // self.spec.block, ndev) * self.spec.block
-        return n_pad, per, per * ndev
+        return plan_shard_geom(s, Lb, self.spec.block, ndev)
 
     def _sharded_blocks(self, eng: TileEngine, n_pad: int, n_sh: int):
         """All (bucket-padded) windows of ``eng``, further padded to
@@ -704,9 +736,7 @@ class DiscordEngine:
         ``n_pad`` is the base-rung padded window count and ``nb_p``
         the query block count padded to a device multiple (1 device =
         no padding)."""
-        n_pad = self._n_pad(ladder[0], Lb)
-        nb = n_pad // self.spec.block
-        return n_pad, ceil_div(nb, ndev) * ndev
+        return plan_pan_row_geom(ladder, Lb, self.spec.block, ndev)
 
     def _pan_sharded_plan(self, ladder: tuple, Lb: int):
         """Mesh-sharded pan sweep: the query *blocks* are sharded
@@ -2094,3 +2124,191 @@ class PanStream:
             extra={"appends": self.appends, "schedule": "stream"})
         return eng._stamp_pan_runtime(pan,
                                       time.perf_counter() - t0)
+
+
+# ----------------------------------------------------------------------
+# Plan-kind registry (the IR auditor's discovery surface)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class PlanKindAudit:
+    """One plan-cache kind at a pinned, representative audit geometry.
+
+    ``pattern`` is the expected ordered ``dot_general`` decomposition
+    of the traced plan body on the ``xla`` backend: one ``(cells,
+    width)`` entry per dot site in program order, where ``cells`` is
+    the total swept (query x candidate) cell count with every scan /
+    ``lax.map`` / mesh multiplicity folded in, and ``width`` the
+    contraction length.  ``groups`` assigns dot sites to the
+    width-normalized lane groups of docs/cps.md — ``((site_idx, ...),
+    s_norm)`` — so the modelled lane count is
+
+        sum over groups of  units * ceil(macs_g / units / s_norm)
+
+    with ``macs_g = sum(cells_i * width_i)`` over the group's sites.
+    ``units`` is the number of independent per-series accounting units
+    (the batch width of ``batched``/``*_mb`` kinds — their runtime
+    accounting applies the ceil per series, then multiplies).
+    ``lanes`` is the ``tile_lanes`` the runtime call site books for
+    the same geometry; ``repro.analysis.irlint`` asserts the traced
+    IR reproduces ``pattern`` exactly and that ``model_lanes()`` of
+    the traced dots equals ``lanes``.
+    """
+    kind: str
+    family: str          # "local" | "mb" | "ring"
+    pan: bool            # pan-ladder kind (multi-width dot pattern)
+    spec_template: str   # "mp" | "pan" | "ring" | "mp_ndev" | "pan_ndev"
+    builder: str         # DiscordEngine plan-builder method name
+    build_args: tuple    # builder arguments at the pinned geometry
+    avals: tuple         # ((shape, dtype-name), ...) abstract inputs
+    pattern: tuple       # ((cells, width), ...) expected dot sites
+    groups: tuple        # (((site_idx, ...), s_norm), ...)
+    units: int           # independent per-series accounting units
+    lanes: int           # runtime tile_lanes at this geometry
+
+    def model_lanes(self, dots=None) -> int:
+        """Width-normalized lane count of a traced ``(cells, width)``
+        dot decomposition (defaults to the expected ``pattern``)."""
+        dots = tuple(self.pattern if dots is None else dots)
+        total = 0
+        for sites, s_norm in self.groups:
+            macs = sum(dots[i][0] * dots[i][1] for i in sites)
+            total += self.units * ceil_div(macs // self.units, s_norm)
+        return int(total)
+
+
+def plan_kind_registry(*, s: int = 24, ladder=(16, 24, 32),
+                       block: int = 32, length: int = 90,
+                       Qb: int = 32, batch: int = 2, ndev: int = 1
+                       ) -> "OrderedDict[str, PlanKindAudit]":
+    """Every registered plan-cache kind at one pinned geometry.
+
+    The IR auditor (``repro.analysis.irlint``) *discovers* plan kinds
+    here instead of hard-coding them — a new plan builder without a
+    registry entry fails the auditor's coverage test, and each entry
+    carries the expected dot decomposition + runtime lane formula of
+    its family so the static FLOP/lane cross-audit stays honest.  The
+    geometry knobs mirror the sanitizer's defaults (length 90 buckets
+    to 256 so most of every tile row is padding); ``ndev`` shapes the
+    ``*_ring`` entries and must match the mesh the auditor builds.
+    """
+    lad = canonical_ladder(ladder)
+    if len(lad) < 2:
+        raise ValueError("the audit ladder needs >= 2 rungs (the "
+                         "pan_step kind extends across widths), got "
+                         f"{lad}")
+    R = len(lad)
+    Lb = length_bucket(int(length))
+    s, Qb, B, ndev = int(s), int(Qb), int(batch), int(ndev)
+    n_pad = plan_pad_geom(s, Lb, block)
+    _, per, n_sh = plan_shard_geom(s, Lb, block, ndev)
+    p_pad = plan_pad_geom(lad[0], Lb, block)
+    _, p_per, p_sh = plan_shard_geom(lad[0], Lb, block, ndev)
+    _, nb_p = plan_pan_row_geom(lad, Lb, block, ndev)
+    Bp = ceil_div(B, ndev) * ndev
+    #: per-site contraction widths of one pan sweep: full base width,
+    #: then each rung's extension
+    widths = (lad[0],) + tuple(lad[r] - lad[r - 1] for r in range(1, R))
+    f32, i32 = "float32", "int32"
+
+    def pan_pattern(rows, cols, mult=1):
+        return tuple((mult * rows * cols, w) for w in widths)
+
+    per_rung = tuple(((r,), lad[r]) for r in range(R))
+
+    entries = (
+        PlanKindAudit(
+            "profile", "local", False, "mp", "_profile_plan",
+            (s, Lb), (((Lb,), f32), ((), i32)),
+            ((n_pad * n_pad, s),), (((0,), s),), 1, n_pad ** 2),
+        PlanKindAudit(
+            "batched", "local", False, "mp", "_batched_plan",
+            (s, B, Lb), (((B, Lb), f32), ((), i32)),
+            ((B * n_pad * n_pad, s),), (((0,), s),), B,
+            B * n_pad ** 2),
+        PlanKindAudit(
+            "tail", "local", False, "mp", "_tail_plan",
+            (s, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
+            ((Qb * n_pad, s),), (((0,), s),), 1, Qb * n_pad),
+        PlanKindAudit(
+            "pan", "local", True, "pan", "_pan_plan",
+            (lad, Lb), (((Lb,), f32), ((), i32)),
+            pan_pattern(p_pad, p_pad), per_rung, 1,
+            pan_lanes(lad, p_pad, p_pad)),
+        PlanKindAudit(
+            "pan_tail", "local", True, "pan", "_pan_tail_plan",
+            (lad, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
+            pan_pattern(Qb, p_pad), per_rung, 1,
+            int(sum(pan_rung_shares(lad, Qb, p_pad)))),
+        PlanKindAudit(
+            "pan_base", "local", True, "pan", "_pan_base_plan",
+            (lad[0], Lb), (((Lb,), f32), ((), i32)),
+            ((p_pad * p_pad, lad[0]),), (((0,), lad[0]),), 1,
+            p_pad ** 2),
+        PlanKindAudit(
+            "pan_step", "local", True, "pan", "_pan_step_plan",
+            (lad, Lb, p_pad),
+            (((Lb,), f32), ((p_pad, p_pad), f32), ((), i32)),
+            tuple((p_pad * p_pad, w) for w in widths[1:]),
+            # the LB schedule accounts one evaluated step as a single
+            # extension at the step's final width (docs/cps.md)
+            ((tuple(range(R - 1)), lad[-1]),), 1,
+            ceil_div(p_pad * p_pad * (lad[-1] - lad[0]), lad[-1])),
+        PlanKindAudit(
+            "pan_batched", "local", True, "pan", "_pan_batched_plan",
+            (lad, B, Lb), (((B, Lb), f32), ((), i32)),
+            pan_pattern(p_pad, p_pad, B), per_rung, B,
+            B * pan_lanes(lad, p_pad, p_pad)),
+        PlanKindAudit(
+            "profile_mb", "mb", False, "mp", "_profile_mb_plan",
+            (s, Lb, B), (((B, Lb), f32), ((B,), i32)),
+            ((B * n_pad * n_pad, s),), (((0,), s),), B,
+            B * n_pad ** 2),
+        PlanKindAudit(
+            "tail_mb", "mb", False, "mp", "_tail_mb_plan",
+            (s, Lb, Qb, B), (((B, Lb), f32), ((B,), i32), ((B,), i32)),
+            ((B * Qb * n_pad, s),), (((0,), s),), B, B * Qb * n_pad),
+        PlanKindAudit(
+            "pan_mb", "mb", True, "pan", "_pan_mb_plan",
+            (lad, Lb, B), (((B, Lb), f32), ((B,), i32)),
+            pan_pattern(p_pad, p_pad, B), per_rung, B,
+            B * pan_lanes(lad, p_pad, p_pad)),
+        PlanKindAudit(
+            "pan_tail_mb", "mb", True, "pan", "_pan_tail_mb_plan",
+            (lad, Lb, Qb, B),
+            (((B, Lb), f32), ((B,), i32), ((B,), i32)),
+            pan_pattern(Qb, p_pad, B), per_rung, B,
+            B * int(sum(pan_rung_shares(lad, Qb, p_pad)))),
+        PlanKindAudit(
+            "ring", "ring", False, "ring", "_ring_plan",
+            (s, Lb), (((Lb,), f32), ((), i32)),
+            ((n_sh * per * ndev, s),), (((0,), s),), 1,
+            n_sh * per * ndev),
+        PlanKindAudit(
+            "batched_ring", "ring", False, "mp_ndev",
+            "_batched_sharded_plan",
+            (s, Bp, Lb), (((Bp, Lb), f32), ((1,), i32)),
+            ((Bp * n_pad * n_pad, s),), (((0,), s),), Bp,
+            Bp * n_pad ** 2),
+        PlanKindAudit(
+            "tail_ring", "ring", False, "mp_ndev", "_tail_sharded_plan",
+            (s, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
+            ((Qb * n_sh, s),), (((0,), s),), 1, Qb * n_sh),
+        PlanKindAudit(
+            "pan_ring", "ring", True, "pan_ndev", "_pan_sharded_plan",
+            (lad, Lb), (((Lb,), f32), ((), i32)),
+            pan_pattern(nb_p * block, p_pad), per_rung, 1,
+            pan_lanes(lad, nb_p * block, p_pad)),
+        PlanKindAudit(
+            "pan_tail_ring", "ring", True, "pan_ndev",
+            "_pan_tail_sharded_plan",
+            (lad, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
+            pan_pattern(Qb, p_sh), per_rung, 1,
+            int(sum(pan_rung_shares(lad, Qb, p_sh)))),
+        PlanKindAudit(
+            "pan_batched_ring", "ring", True, "pan_ndev",
+            "_pan_batched_sharded_plan",
+            (lad, Bp, Lb), (((Bp, Lb), f32), ((1,), i32)),
+            pan_pattern(p_pad, p_pad, Bp), per_rung, Bp,
+            Bp * pan_lanes(lad, p_pad, p_pad)),
+    )
+    return OrderedDict((e.kind, e) for e in entries)

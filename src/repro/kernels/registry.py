@@ -93,6 +93,39 @@ if ((os.cpu_count() or 1) <= 1
         pass
 
 
+#: IR-level traits per backend, consumed by the jaxpr auditor
+#: (``repro.analysis.irlint``).  ``host_callback`` marks backends
+#: whose tiles legitimately stage a ``jax.pure_callback`` into the
+#: plan body (so the auditor's callback-containment rule knows where
+#: callbacks are allowed); ``dot_model`` says how the backend's dot
+#: sites relate to the static FLOP/lane model of docs/cps.md:
+#: ``"exact"`` — every ``dot_general`` in the jaxpr maps 1:1 onto
+#: accounted tile lanes; ``"mxu-padded"`` — dots live inside
+#: ``pallas_call`` kernels padded to MXU tile geometry (128-lane
+#: widths), so IR-level FLOPs over-count the accounted lanes by the
+#: padding and the lane cross-audit does not apply; ``"host"`` — the
+#: contraction happens in host NumPy behind the callback and never
+#: appears in the IR at all.
+BACKEND_TRAITS: Dict[str, Dict[str, object]] = {
+    "xla": {"host_callback": False, "dot_model": "exact"},
+    "pallas": {"host_callback": False, "dot_model": "mxu-padded"},
+    "numpy": {"host_callback": True, "dot_model": "host"},
+}
+
+
+def backend_traits(name: str) -> Dict[str, object]:
+    """IR traits of backend ``name`` (aliases resolved).  Unregistered
+    custom backends default to conservative traits (no callbacks
+    expected, no exact dot model claimed)."""
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown tile backend {name!r}; available: "
+            f"{available_backends()}")
+    return dict(BACKEND_TRAITS.get(
+        name, {"host_callback": False, "dot_model": "unknown"}))
+
+
 def register_backend(name: str):
     """Decorator: add a tile backend under ``name``."""
     def deco(fn: TileBackendFn) -> TileBackendFn:

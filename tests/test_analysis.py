@@ -13,6 +13,18 @@
   4. SURFACE — importing ``repro.analysis`` and running the lint +
      static-speckey CLI never initializes jax; exit codes gate on
      findings; ``launch/discord.py --selfcheck`` is wired up.
+  5. IRLINT — ``plan_kind_registry`` covers every ``*_plan`` builder;
+     the static lane/FLOP model equals the runtime formulas (all 18
+     kinds, 1/2/4 devs) and the *executed* ``tile_lanes`` deltas; the
+     repo's jaxprs audit clean; each IR rule fires on a synthetic
+     true positive (f64 literal, unpinned dot_general, smuggled
+     callback, oversized const, miscounted lane model) and stays
+     quiet on the near-miss.
+  6. SHADOW — f64 replay is clean on the real engines; the regret
+     comparator flags drifted positions and diverging nnds; inflated
+     tile numerics are caught end to end.
+  7. CLI — the wall-clock budget and the new passes gate exit codes
+     and populate the v2 report counts.
 """
 import json
 import os
@@ -106,6 +118,64 @@ class TestHostSyncRule:
     def test_pan_module_level_near_miss(self):
         src = "def canonical_ladder(lad):\n    return np.sort(lad)\n"
         assert _rules(src, "core/pan.py") == []
+
+
+class TestDeferredHostSyncRule:
+    """The serve/telemetry dispatch paths: output syncs and nested
+    flushes are banned, host-side *input* staging is not."""
+
+    def test_output_sync_in_exec_group_positive(self):
+        src = ("class DiscordServer:\n"
+               "    def _exec_group(self, chunk):\n"
+               "        out = self._dispatch(chunk)\n"
+               "        return np.asarray(out)\n")
+        assert "host-sync" in _rules(src, "serve/discord.py")
+
+    def test_item_and_block_positive(self):
+        src = ("class DiscordServer:\n"
+               "    def _exec_group(self, chunk):\n"
+               "        n = self.counter.item()\n"
+               "        return self.out.block_until_ready()\n")
+        assert _rules(src, "serve/discord.py") == ["host-sync"]
+
+    def test_nested_flush_positive(self):
+        src = ("class TelemetryMonitor:\n"
+               "    def _prepare_metric(self, name, x):\n"
+               "        self.server.flush()\n"
+               "        return name\n")
+        assert "host-sync" in _rules(src, "telemetry/monitor.py")
+
+    def test_input_staging_near_miss(self):
+        # np.stack/np.array input staging and host float() math are
+        # the dispatch path's normal business — only *output* syncs
+        # (np.asarray/to_np/.item()) break the deferred contract
+        src = ("class DiscordServer:\n"
+               "    def _exec_group(self, chunk):\n"
+               "        stack = np.stack([op['xp'] for op in chunk])\n"
+               "        loc = float(stack.mean())\n"
+               "        return self._dispatch(stack, loc)\n")
+        assert _rules(src, "serve/discord.py") == []
+
+    def test_other_method_near_miss(self):
+        # the same syncs outside the deferred scopes are fine (the
+        # response path _finish_group is where blocking folds live)
+        src = ("class DiscordServer:\n"
+               "    def _finish_group(self, chunk, out):\n"
+               "        return np.asarray(out)\n")
+        assert _rules(src, "serve/discord.py") == []
+
+    def test_repo_scopes_exist(self):
+        # the deferred scopes must keep pointing at real methods
+        import ast
+        from repro.analysis.lint import HostSyncRule
+        root = package_root()
+        rule = HostSyncRule()
+        for rel, names in rule.DEFERRED.items():
+            tree = ast.parse((root / rel).read_text())
+            found = {n.name for n in ast.walk(tree)
+                     if isinstance(n, ast.FunctionDef)}
+            for name in names:
+                assert name in found, f"{rel} lost {name}"
 
 
 class TestF64KernelRule:
@@ -311,14 +381,31 @@ def test_selfcheck_maps_spec_to_kind_family():
 def test_report_schema(tmp_path):
     f = Finding("lint", "tile-math", "core/x.py", 3, "nope")
     doc = write_report(str(tmp_path / "r.json"), [f],
-                       meta={"passes": ["lint"]})
+                       meta={"passes": ["lint"]},
+                       counts={"lint": {"files": 94},
+                               "speckey": {"fields": 11}})
     loaded = json.loads((tmp_path / "r.json").read_text())
     assert loaded == doc
     assert loaded["ok"] is False
-    assert loaded["counts"] == {"lint": 1}
+    # coverage numbers survive, finding totals fold in, and a clean
+    # pass still reports its scope (findings: 0)
+    assert loaded["counts"] == {
+        "lint": {"files": 94, "findings": 1},
+        "speckey": {"fields": 11, "findings": 0}}
     assert loaded["findings"][0]["rule"] == "tile-math"
     assert report_dict([])["ok"] is True
+    assert report_dict([])["counts"] == {}
     assert str(f) == "core/x.py:3: [lint/tile-math] nope"
+
+
+def test_report_key_order_deterministic(tmp_path):
+    f = Finding("lint", "tile-math", "core/x.py", 3, "nope")
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    write_report(str(a), [f], meta={"z": 1, "a": 2},
+                 counts={"lint": {"rules": 4, "files": 94}})
+    write_report(str(b), [f], meta={"a": 2, "z": 1},
+                 counts={"lint": {"files": 94, "rules": 4}})
+    assert a.read_text() == b.read_text()
 
 
 def test_lint_and_static_speckey_are_jax_free():
@@ -365,3 +452,268 @@ def test_cli_lint_exit_codes(tmp_path):
 def test_launcher_selfcheck_flag_in_help():
     from repro.launch.discord import build_parser
     assert "--selfcheck" in build_parser().format_help()
+
+
+# ---------------------------------------------------------------------
+# 5. IRLINT: plan-kind registry, lane model, per-rule TP + near-miss
+# ---------------------------------------------------------------------
+def _fake_cell(fn, *, backend="pallas", znorm=True,
+               avals=(((8,), "float32"),), const_bytes=None,
+               **overrides):
+    """Run _audit_cell on an arbitrary traced fn by grafting it onto
+    a registry entry (the builder is looked up on the 'engine')."""
+    import dataclasses
+    from types import SimpleNamespace
+
+    from repro.analysis.irlint import DEFAULT_CONST_BYTES, _audit_cell
+    from repro.core.engine import plan_kind_registry
+    entry = dataclasses.replace(
+        plan_kind_registry()["profile"], builder="fake_plan",
+        build_args=(), avals=tuple(avals), **overrides)
+    eng = SimpleNamespace(fake_plan=lambda: fn)
+    return _audit_cell(entry, eng, backend, znorm,
+                       const_bytes=const_bytes or DEFAULT_CONST_BYTES)
+
+
+def test_plan_kind_registry_covers_every_builder():
+    from repro.analysis.irlint import coverage_audit
+    from repro.core.engine import DiscordEngine, plan_kind_registry
+    reg = plan_kind_registry()
+    assert len(reg) == 18
+    builders = {n for n in dir(DiscordEngine)
+                if n.endswith("_plan") and n.startswith("_")
+                and not n.startswith(("_get", "_require"))
+                and callable(getattr(DiscordEngine, n))}
+    assert {e.builder for e in reg.values()} == builders
+    assert coverage_audit() == []
+
+
+def test_lane_model_matches_runtime_formula_every_kind():
+    # static half of the acceptance bar: the width-normalized lane
+    # count derived from each entry's declared dot pattern equals the
+    # tile_lanes the runtime accounting formulas book, at 1/2/4 devs
+    from repro.core.engine import plan_kind_registry
+    for ndev in (1, 2, 4):
+        for e in plan_kind_registry(ndev=ndev).values():
+            assert e.model_lanes() == e.lanes, (e.kind, ndev)
+
+
+def test_lane_model_matches_executed_tile_lanes():
+    # executed half: run one kind per plan family at the pinned audit
+    # geometry and compare the engine's booked tile_lanes delta
+    import numpy as np
+
+    from repro.core.engine import DiscordEngine, plan_kind_registry
+    from repro.core.spec import SearchSpec
+    reg = plan_kind_registry(ndev=1)
+    x = np.sin(0.31 * np.arange(90.0))
+    base = dict(k=2, znorm=True, backend="xla", block=32)
+
+    def delta(eng, run):
+        before = eng.stats.tile_lanes
+        run(eng)
+        return eng.stats.tile_lanes - before
+
+    mp = DiscordEngine(SearchSpec(s=24, method="matrix_profile",
+                                  **base))
+    assert delta(mp, lambda e: e.search(x)) == reg["profile"].lanes
+    assert delta(mp, lambda e: e.open_stream(
+        s=24, history=x[:70]).append(x[70:]).discords()) \
+        == reg["profile"].lanes + reg["tail"].lanes
+    pan = DiscordEngine(SearchSpec(s=(16, 24, 32),
+                                   method="matrix_profile", **base))
+    assert delta(pan, lambda e: e.search_pan(x)) == reg["pan"].lanes
+    ring = DiscordEngine(SearchSpec(s=24, method="ring", ndev=1,
+                                    **base))
+    assert delta(ring, lambda e: e.search(x)) == reg["ring"].lanes
+
+
+def test_irlint_repo_clean():
+    from repro.analysis.irlint import run_irlint
+    findings, meta = run_irlint(backends=("numpy", "xla"))
+    assert findings == []
+    assert len(meta["lane_model"]) == 18
+    for entry in meta["lane_model"].values():
+        assert entry["model_lanes"] == entry["tile_lanes"]
+
+
+def test_irlint_f64_literal_tp_and_near_miss():
+    import jax
+
+    def fn(v):
+        return v * 2.0
+
+    with jax.experimental.enable_x64():
+        findings, _ = _fake_cell(fn, avals=(((4,), "float64"),))
+    assert any(f.rule == "ir-f64" for f in findings)
+    findings, _ = _fake_cell(fn, avals=(((4,), "float32"),))
+    assert [f.rule for f in findings] == []
+
+
+def test_irlint_dot_pet_tp_and_near_miss():
+    import jax.numpy as jnp
+    from jax import lax
+    dn = (((1,), (0,)), ((), ()))
+    avals = (((4, 5), "float32"), ((5, 6), "float32"))
+
+    findings, _ = _fake_cell(lambda a, b: lax.dot_general(a, b, dn),
+                             avals=avals)
+    assert any(f.rule == "ir-dot-pet" for f in findings)
+    findings, _ = _fake_cell(
+        lambda a, b: lax.dot_general(
+            a, b, dn, preferred_element_type=jnp.float32),
+        avals=avals)
+    assert [f.rule for f in findings] == []
+
+
+def test_irlint_callback_smuggled_into_device_plan():
+    import jax
+    import numpy as np
+
+    def fn(v):
+        return jax.pure_callback(
+            lambda a: np.asarray(a),
+            jax.ShapeDtypeStruct((4,), np.float32), v)
+
+    # a host callback traced into a device-backend (ring/mb-capable)
+    # plan is the violation; the numpy reference backend declares it
+    findings, _ = _fake_cell(fn, backend="xla", avals=(((4,),
+                                                        "float32"),))
+    assert any(f.rule == "ir-callback" for f in findings)
+    findings, _ = _fake_cell(fn, backend="numpy",
+                             avals=(((4,), "float32"),))
+    assert not any(f.rule == "ir-callback" for f in findings)
+
+
+def test_irlint_oversized_const_tp_and_near_miss():
+    import jax.numpy as jnp
+    big = jnp.zeros((256, 256), jnp.float32)       # 256 KiB baked
+    findings, _ = _fake_cell(lambda v: v[0] + big)
+    assert any(f.rule == "ir-const" for f in findings)
+    small = jnp.zeros((64, 64), jnp.float32)       # 16 KiB: fine
+    findings, _ = _fake_cell(lambda v: v[0] + small)
+    assert not any(f.rule == "ir-const" for f in findings)
+
+
+def test_irlint_catches_miscounted_lane_model():
+    import dataclasses
+
+    from repro.analysis.irlint import _audit_cell, _Engines
+    from repro.core.engine import plan_kind_registry
+    entry = plan_kind_registry(ndev=1)["profile"]
+    eng = _Engines(s=24, ladder=(16, 24, 32), block=32,
+                   ndev=1).get("mp", "xla", True)
+    findings, _ = _audit_cell(entry, eng, "xla", True,
+                              const_bytes=1 << 20)
+    assert findings == []      # the real entry audits clean
+    wrong = dataclasses.replace(entry, lanes=entry.lanes + 1)
+    findings, _ = _audit_cell(wrong, eng, "xla", True,
+                              const_bytes=1 << 20)
+    assert any(f.rule == "ir-lane-model" for f in findings)
+    tampered = dataclasses.replace(entry, pattern=((123, 45),))
+    findings, _ = _audit_cell(tampered, eng, "xla", True,
+                              const_bytes=1 << 20)
+    assert any(f.rule == "ir-flop-model" for f in findings)
+
+
+# ---------------------------------------------------------------------
+# 6. SHADOW: f64 replay clean on the repo, drift/divergence caught
+# ---------------------------------------------------------------------
+def test_shadow_clean_on_core_kinds():
+    from repro.analysis.shadow import DEFAULT_TOL, run_shadow
+    findings, meta = run_shadow(backends=("xla",),
+                                kinds=("profile", "tail", "pan"))
+    assert findings == []
+    assert len(meta["checked"]) == 6       # 3 kinds x znorm True/False
+    for kind, worst in meta["worst_by_kind"].items():
+        assert worst["worst_rel"] < DEFAULT_TOL, kind
+        assert worst["min_margin"] is None or worst["min_margin"] > 0
+
+
+def test_shadow_comparator_detects_drift_and_divergence():
+    import math
+    from types import SimpleNamespace
+
+    import numpy as np
+
+    from repro.analysis.shadow import (_compare_discord,
+                                       hostile_series, ref_profile,
+                                       ref_topk)
+    x, _ = hostile_series(90)
+    prof = ref_profile(x, 24, True)
+    pos, vals, _margin = ref_topk(prof, 2, 24)
+
+    def run(res):
+        findings, cell = [], {"worst_rel": 0.0, "worst_ulp": 0.0,
+                              "min_margin": math.inf}
+        _compare_discord("t", res, x, 24, True, 2, 0.05, findings,
+                         cell)
+        return findings, cell
+
+    findings, cell = run(SimpleNamespace(positions=pos, nnds=vals))
+    assert findings == [] and cell["worst_rel"] == 0.0
+    # 20% nnd error at the right positions -> divergence
+    findings, _ = run(SimpleNamespace(positions=pos,
+                                      nnds=[v * 1.2 for v in vals]))
+    assert any(f.rule == "nnd-divergence" for f in findings)
+    # rank-0 pointing at the *least* discordant window -> drift
+    worst_pos = int(np.argmin(np.where(np.isfinite(prof), prof,
+                                       np.inf)))
+    findings, _ = run(SimpleNamespace(positions=[worst_pos, pos[1]],
+                                      nnds=vals))
+    assert any(f.rule == "topk-drift" for f in findings)
+
+
+def test_shadow_catches_inflated_tile_numerics(monkeypatch):
+    from repro.analysis.shadow import run_shadow
+    from repro.core.tiles import TileEngine
+
+    # a 21% d² inflation models a broken accumulator/σ clamp: the
+    # f64 reference is independent, so every nnd lands ~10% high
+    orig = TileEngine.d2
+    monkeypatch.setattr(
+        TileEngine, "d2",
+        lambda self, *a, **kw: 1.21 * orig(self, *a, **kw))
+    findings, _ = run_shadow(backends=("xla",), znorms=(True,),
+                             kinds=("profile",))
+    assert any(f.rule in ("nnd-divergence", "topk-drift")
+               for f in findings)
+
+
+# ---------------------------------------------------------------------
+# 7. CLI: new passes + wall-clock budget
+# ---------------------------------------------------------------------
+def test_cli_budget_finding(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    rp = tmp_path / "rep.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint",
+         "--budget-s", "1e-9", "--report", str(rp)],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 1, out.stderr + out.stdout
+    doc = json.loads(rp.read_text())
+    assert any(f["rule"] == "wall-clock" for f in doc["findings"])
+    assert doc["counts"]["budget"]["findings"] == 1
+    # 0 disables the budget entirely
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "lint",
+         "--budget-s", "0", "--report", "-"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr + out.stdout
+
+
+def test_cli_irlint_pass(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    rp = tmp_path / "rep.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "irlint",
+         "--backends", "xla", "--kinds", "profile,tail",
+         "--report", str(rp)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr + out.stdout
+    doc = json.loads(rp.read_text())
+    assert doc["ok"] is True
+    assert doc["counts"]["irlint"] == {"cells": 4, "findings": 0,
+                                       "kinds": 2}
+    for entry in doc["meta"]["irlint"]["lane_model"].values():
+        assert entry["model_lanes"] == entry["tile_lanes"]
