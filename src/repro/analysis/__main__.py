@@ -25,7 +25,10 @@ from .report import Finding, print_findings, write_report
 from .speckey import coverage, static_audit
 
 PASSES = ("all", "lint", "speckey", "sanitize", "irlint", "shadow")
-DEFAULT_BUDGET_S = 120.0
+# raised 120 -> 180 when the quantized (qsweep*) plan family joined
+# the sanitize/shadow/irlint matrices — 23 kinds now, with the quant
+# shadow cells already trimmed to one backend (see run_shadow)
+DEFAULT_BUDGET_S = 180.0
 
 
 def _parse_args(argv):

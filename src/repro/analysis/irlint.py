@@ -64,8 +64,11 @@ __all__ = ["DEFAULT_CONST_BYTES", "ZNORM_ONLY_KINDS", "audit_matrix",
 #: id/iota vectors the plans legitimately bake are ~1 KiB)
 DEFAULT_CONST_BYTES = 128 * 1024
 
-#: kinds the engine itself refuses to run raw (znorm=False)
-ZNORM_ONLY_KINDS = frozenset({"ring", "tail_ring"})
+#: kinds whose spec cannot be built raw (znorm=False): the engine
+#: refuses raw ring/tail_ring outright, and qsweep_ring rides a
+#: method="ring" spec that spec validation rejects raw (the local
+#: qsweep kinds audit both modes — their bound body handles raw)
+ZNORM_ONLY_KINDS = frozenset({"ring", "tail_ring", "qsweep_ring"})
 
 _CALLBACK_PRIMS = ("pure_callback", "io_callback")
 
@@ -243,6 +246,14 @@ class _Engines:
             "pan": dict(s=self.ladder, method="matrix_profile"),
             "pan_ndev": dict(s=self.ladder, method="matrix_profile",
                              ndev=self.ndev),
+            # the quantized kinds audit at bf16 — int8 pins an int32
+            # dot accumulator by construction (never a pet="float32"
+            # site), so bf16 is the precision whose dot the
+            # ir-dot-pet rule must see pinned
+            "qsweep": dict(s=self.s, method="matrix_profile",
+                           precision="bf16"),
+            "qsweep_ndev": dict(s=self.s, method="ring",
+                                ndev=self.ndev, precision="bf16"),
         }
         eng = DiscordEngine(SearchSpec(**{**base, **specs[template]}))
         self._cache[key] = eng

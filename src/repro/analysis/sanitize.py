@@ -14,11 +14,15 @@ biasing a top-k.
 
 Plan-kind coverage (``ALL_KINDS``) spans the whole session surface:
 profile / batched / stream-tail / pan ladder / pan LB-abandon /
-pan-stream / pan-batched, each in its local and mesh-sharded form.
-Raw (``znorm=False``) skips the two kinds the engine itself refuses
-to run sharded-raw (spec validation rejects raw ``ring``; a raw
-sharded stream falls back to the local tail plan, already covered by
-``tail``).
+pan-stream / pan-batched / quantized sweep (bound pass + exact
+refinement, docs/cps.md), each in its local and mesh-sharded form.
+Raw (``znorm=False``) skips the kinds the engine itself refuses
+to run sharded-raw (spec validation rejects raw ``ring``, hence also
+``qsweep_ring``; a raw sharded stream falls back to the local tail
+plan, already covered by ``tail``).  The quantized kinds are the
+sharpest cells here: a pad lane that leaks into the *bound* pass
+doesn't just bias a min — it can wrongly prune a block, so the
+bit-identical bar doubles as a prune-soundness probe.
 
 This module imports jax lazily — keep it off the lint-only path.
 """
@@ -35,12 +39,12 @@ __all__ = ["ALL_KINDS", "LOCAL_KINDS", "SHARDED_KINDS", "CANARIES",
            "pad_fill", "run_sanitizer", "selfcheck"]
 
 LOCAL_KINDS = ("profile", "batched", "tail", "pan", "pan_lb",
-               "pan_tail", "pan_batched")
+               "pan_tail", "pan_batched", "qsweep", "qsweep_tail")
 SHARDED_KINDS = ("ring", "batched_ring", "tail_ring", "pan_ring",
-                 "pan_tail_ring", "pan_batched_ring")
+                 "pan_tail_ring", "pan_batched_ring", "qsweep_ring")
 ALL_KINDS = LOCAL_KINDS + SHARDED_KINDS
 #: kinds with no raw-mode sharded path (engine-level, not a gap here)
-_RAW_SKIP = {"ring", "tail_ring"}
+_RAW_SKIP = {"ring", "tail_ring", "qsweep_ring"}
 
 CANARIES = (("nan", float("nan")), ("+inf", math.inf),
             ("-inf", -math.inf))
@@ -104,11 +108,13 @@ class _Context:
     def __init__(self, backend: str, znorm: bool, *,
                  s: int = _S, ladder: Sequence[int] = _LADDER,
                  block: int = _BLOCK, ndev: Optional[int] = None,
-                 length: int = _LEN, tail_at: int = _TAIL_AT):
+                 length: int = _LEN, tail_at: int = _TAIL_AT,
+                 precision: str = "bf16"):
         import numpy as np
         self.backend, self.znorm = backend, znorm
         self.s, self.ladder = int(s), tuple(int(v) for v in ladder)
         self.block, self._ndev = int(block), ndev
+        self.precision = precision
         t = np.arange(float(length))
         self.x = np.sin(0.31 * t) + 0.23 * np.cos(0.11 * t)
         self.x[int(0.6 * length)] += 2.5        # a planted discord
@@ -138,6 +144,11 @@ class _Context:
             "pan": dict(s=self.ladder, method="matrix_profile"),
             "pan_ndev": dict(s=self.ladder, method="matrix_profile",
                              ndev=self.ndev),
+            "qsweep": dict(s=self.s, method="matrix_profile",
+                           precision=self.precision),
+            "qsweep_ndev": dict(s=self.s, method="ring",
+                                ndev=self.ndev,
+                                precision=self.precision),
         }
         eng = DiscordEngine(SearchSpec(**{**base, **specs[key]}))
         self._engines[key] = eng
@@ -180,6 +191,14 @@ class _Context:
             return st.append(x[at:]).discords()
         if kind == "pan_batched_ring":
             return self._engine("pan_ndev").search_batched(stack)
+        if kind == "qsweep":
+            return self._engine("qsweep").search(x)
+        if kind == "qsweep_tail":
+            st = self._engine("qsweep").open_stream(s=self.s,
+                                                    history=x[:at])
+            return st.append(x[at:]).discords()
+        if kind == "qsweep_ring":
+            return self._engine("qsweep_ndev").search(x)
         raise ValueError(f"unknown plan kind {kind!r} "
                          f"(known: {ALL_KINDS})")
 
@@ -255,9 +274,14 @@ def _kinds_for_spec(spec) -> Tuple[str, ...]:
         if sharded:
             return ("pan_ring", "pan_tail_ring", "pan_batched_ring")
         return ("pan", "pan_lb", "pan_tail", "pan_batched")
+    quant = spec.precision != "f32"
     if spec.method == "ring":
-        return ("ring",)
+        return ("qsweep_ring",) if quant else ("ring",)
     if spec.method == "matrix_profile":
+        if quant:
+            # the quant stream tail is a local plan even when sharded
+            return (("qsweep_ring", "qsweep_tail") if sharded
+                    else ("qsweep", "qsweep_tail"))
         if sharded:
             return ("batched_ring", "tail_ring")
         return ("profile", "batched", "tail")
@@ -277,5 +301,6 @@ def selfcheck(spec) -> Tuple[List[Finding], List[str]]:
     ctx = _Context(spec.backend or "xla", spec.znorm,
                    s=spec.windows[0], ladder=ladder,
                    block=min(spec.block, 64), ndev=spec.ndev,
-                   length=length, tail_at=length - 16)
+                   length=length, tail_at=length - 16,
+                   precision=spec.precision)
     return _sanitize_ctx(ctx, kinds)

@@ -27,8 +27,22 @@ an independent float64 reference path:
   ``tol`` (relative) of the f64 value;
 * per-cell worst-case relative error, f32 ULP distance, and the
   reference's own top-k margin go to the report — the baseline the
-  future quantized (bf16/int8) tile-sweep pass will be gated
-  against.
+  quantized (bf16/int8) tile-sweep pass is gated against.
+
+The quantized sweep kinds (``qsweep`` / ``qsweep_tail`` /
+``qsweep_ring``, docs/cps.md) replay under **every requested
+precision** and face two gates.  The hostile series gets the same 5%
+regret rule as the exact kinds — the bound pass + f32 refinement
+contract promises bit-identical results, so any extra drift here is a
+soundness bug, not a quantization artifact.  But the hostile series
+is also a degenerate prune case: its huge mean offset inflates the
+window norms and with them the rounding-error radius, so every block
+legitimately survives the bound pass (prune ratio 0, still exact).
+A second replay on the sanitizer's *benign* series therefore asserts
+the bf16 bound pass actually prunes (``qsweep-no-prune``) — without
+it, a silently vacuous bound (radius overflow, wrong norm term) would
+keep passing every exactness gate while the quantized plane quietly
+degenerates into a 2x-cost exact sweep.
 
 Micro-batch (``*_mb``) plans are not separately shadowed: they are
 property-tested bit-identical to their single-stream counterparts
@@ -44,8 +58,12 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 from .report import Finding
 from .sanitize import _RAW_SKIP, ALL_KINDS, _Context
 
-__all__ = ["DEFAULT_TOL", "hostile_series", "ref_profile", "ref_topk",
-           "run_shadow"]
+__all__ = ["DEFAULT_TOL", "QUANT_KINDS", "hostile_series",
+           "ref_profile", "ref_topk", "run_shadow"]
+
+#: plan kinds that run the quantized bound pass + exact refinement —
+#: replayed per precision, and prune-gated on the benign series
+QUANT_KINDS = ("qsweep", "qsweep_tail", "qsweep_ring")
 
 #: max relative nnd error vs the f64 reference before a finding; the
 #: hostile series is built to sit well inside this on a healthy tree
@@ -239,7 +257,8 @@ def _compare_kind(ctx: _ShadowContext, kind: str, res, tol: float,
                   findings: List[Finding], cell: dict,
                   locus: str) -> None:
     k, s, lad, zn = 2, ctx.s, ctx.ladder, ctx.znorm
-    if kind in ("profile", "ring", "tail", "tail_ring"):
+    if kind in ("profile", "ring", "tail", "tail_ring",
+                "qsweep", "qsweep_tail", "qsweep_ring"):
         _compare_discord(locus, res, ctx.x, s, zn, k, tol,
                          findings, cell)
     elif kind in ("batched", "batched_ring"):
@@ -262,11 +281,24 @@ def _compare_kind(ctx: _ShadowContext, kind: str, res, tol: float,
 # ---------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------
+def _benign_prune(backend: str, kind: str, precision: str
+                  ) -> Optional[float]:
+    """Prune ratio of one quant kind on the sanitizer's *benign*
+    series (well-conditioned: the bound radius is tight and the bound
+    pass must actually retire blocks there)."""
+    ctx = _Context(backend, True, precision=precision)
+    res = ctx._run_raw(kind)
+    pr = getattr(res, "extra", {}).get("prune_ratio")
+    return None if pr is None else float(pr)
+
+
 def run_shadow(backends: Iterable[str] = ("numpy", "xla", "pallas"),
                znorms: Iterable[bool] = (True, False),
                kinds: Sequence[str] = ALL_KINDS,
                tol: float = DEFAULT_TOL,
                raw_backends: Iterable[str] = ("xla",),
+               precisions: Sequence[str] = ("bf16", "int8"),
+               quant_backends: Iterable[str] = ("xla",),
                ) -> Tuple[List[Finding], dict]:
     """Replay every (backend, znorm, kind) cell on the hostile series
     against the f64 reference; returns ``(findings, meta)`` with
@@ -278,7 +310,19 @@ def run_shadow(backends: Iterable[str] = ("numpy", "xla", "pallas"),
     mode) runs on every requested backend; raw mode re-replays only
     on ``raw_backends`` — its ``‖q‖² + ‖c‖² − 2⟨q,c⟩`` cancellation
     algebra is shared tile code, and the trimmed cells keep the
-    whole analyzer inside its CI wall-clock budget."""
+    whole analyzer inside its CI wall-clock budget.
+
+    The quantized kinds (:data:`QUANT_KINDS`) fan out over
+    ``precisions`` (cell locus ``kind:precision[...]``) but replay
+    only on ``quant_backends`` — the same budget trim as raw mode;
+    per-backend bound soundness is property-tested exhaustively by
+    tests/test_quantized.py, so the shadow pass only needs one
+    backend to watch the end-to-end regret/prune contract.  They face
+    the same 5% regret rule — their refinement contract is bit-exactness, so
+    quantization buys them no slack — and additionally replay on the
+    benign series, where a zero prune ratio raises ``qsweep-no-prune``
+    (a vacuous bound passes every exactness gate while silently
+    doubling the sweep cost; the cell records both ratios)."""
     unknown = sorted(set(kinds) - set(ALL_KINDS))
     if unknown:
         raise ValueError(f"unknown plan kinds {unknown} "
@@ -288,45 +332,90 @@ def run_shadow(backends: Iterable[str] = ("numpy", "xla", "pallas"),
     cells: Dict[str, dict] = {}
     by_kind: Dict[str, dict] = {}
     raw_backends = tuple(raw_backends)
+    quant_backends = tuple(quant_backends)
     for backend in backends:
         for znorm in znorms:
             if not znorm and backend not in raw_backends:
                 continue
             ctx = _ShadowContext(backend, bool(znorm))
+            qctx: Dict[str, _ShadowContext] = {}
             for kind in kinds:
                 if not znorm and kind in _RAW_SKIP:
                     continue
-                locus = f"{kind}[{backend},znorm={znorm}]"
-                cell = {"worst_rel": 0.0, "worst_ulp": 0.0,
-                        "min_margin": math.inf}
-                try:
-                    res = ctx._run_raw(kind)
-                    _compare_kind(ctx, kind, res, tol, findings,
-                                  cell, locus)
-                except Exception as e:  # noqa: BLE001
-                    findings.append(Finding(
-                        "shadow", "kind-error", locus, 0,
-                        f"shadow replay failed: "
-                        f"{type(e).__name__}: {e}"))
+                if (kind in QUANT_KINDS
+                        and backend not in quant_backends):
                     continue
-                checked.append(locus)
-                cells[locus] = {
-                    "worst_rel": float(cell["worst_rel"]),
-                    "worst_ulp": float(cell["worst_ulp"]),
-                    "min_margin": (float(cell["min_margin"])
-                                   if math.isfinite(cell["min_margin"])
-                                   else None)}
-                agg = by_kind.setdefault(
-                    kind, {"worst_rel": 0.0, "worst_ulp": 0.0,
-                           "min_margin": None})
-                agg["worst_rel"] = max(agg["worst_rel"],
-                                       cells[locus]["worst_rel"])
-                agg["worst_ulp"] = max(agg["worst_ulp"],
-                                       cells[locus]["worst_ulp"])
-                m = cells[locus]["min_margin"]
-                if m is not None:
-                    agg["min_margin"] = (m if agg["min_margin"] is None
-                                         else min(agg["min_margin"], m))
+                if kind in QUANT_KINDS:
+                    for p in precisions:
+                        if p not in qctx:
+                            qctx[p] = _ShadowContext(
+                                backend, bool(znorm), precision=p)
+                    variants = [(f"{kind}:{p}", qctx[p], p)
+                                for p in precisions]
+                else:
+                    variants = [(kind, ctx, None)]
+                for label, c, prec in variants:
+                    locus = f"{label}[{backend},znorm={znorm}]"
+                    cell = {"worst_rel": 0.0, "worst_ulp": 0.0,
+                            "min_margin": math.inf}
+                    try:
+                        res = c._run_raw(kind)
+                        _compare_kind(c, kind, res, tol, findings,
+                                      cell, locus)
+                    except Exception as e:  # noqa: BLE001
+                        findings.append(Finding(
+                            "shadow", "kind-error", locus, 0,
+                            f"shadow replay failed: "
+                            f"{type(e).__name__}: {e}"))
+                        continue
+                    checked.append(locus)
+                    cells[locus] = {
+                        "worst_rel": float(cell["worst_rel"]),
+                        "worst_ulp": float(cell["worst_ulp"]),
+                        "min_margin": (
+                            float(cell["min_margin"])
+                            if math.isfinite(cell["min_margin"])
+                            else None)}
+                    if prec is not None:
+                        pr = getattr(res, "extra", {}).get(
+                            "prune_ratio")
+                        cells[locus]["hostile_prune_ratio"] = (
+                            None if pr is None else float(pr))
+                        if znorm:
+                            try:
+                                bpr = _benign_prune(backend, kind,
+                                                    prec)
+                            except Exception as e:  # noqa: BLE001
+                                findings.append(Finding(
+                                    "shadow", "kind-error", locus, 0,
+                                    "benign-series quant replay "
+                                    f"failed: {type(e).__name__}: "
+                                    f"{e}"))
+                                continue
+                            cells[locus]["benign_prune_ratio"] = bpr
+                            if bpr is None or bpr <= 0.0:
+                                findings.append(Finding(
+                                    "shadow", "qsweep-no-prune",
+                                    locus, 0,
+                                    f"{prec} bound pass pruned "
+                                    f"nothing on the benign series "
+                                    f"(prune_ratio={bpr!r}) — the "
+                                    "bound is vacuous; results stay "
+                                    "exact but the quantized sweep "
+                                    "degenerates into a 2x-cost "
+                                    "exact sweep"))
+                    agg = by_kind.setdefault(
+                        kind, {"worst_rel": 0.0, "worst_ulp": 0.0,
+                               "min_margin": None})
+                    agg["worst_rel"] = max(agg["worst_rel"],
+                                           cells[locus]["worst_rel"])
+                    agg["worst_ulp"] = max(agg["worst_ulp"],
+                                           cells[locus]["worst_ulp"])
+                    m = cells[locus]["min_margin"]
+                    if m is not None:
+                        agg["min_margin"] = (
+                            m if agg["min_margin"] is None
+                            else min(agg["min_margin"], m))
     meta = {"tol": float(tol), "checked": checked, "cells": cells,
             "worst_by_kind": by_kind}
     return findings, meta

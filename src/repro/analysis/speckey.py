@@ -189,7 +189,7 @@ def static_audit(engine_source: Optional[str] = None,
     else:
         attrs = {n.attr for n in ast.walk(plan_key)
                  if isinstance(n, ast.Attribute)}
-        for needed in ("backend", "znorm", "block"):
+        for needed in ("backend", "znorm", "block", "precision"):
             if needed not in attrs:
                 bad("plan-key-prefix", plan_key.lineno,
                     f"_plan_key does not reference {needed!r}; the "
@@ -248,6 +248,7 @@ _PERTURB_KEYED = {
     "block": ({"block": 64}, "search"),
     "ndev": ({"ndev": 1}, "batched"),
     "method": ({"method": "ring"}, "search"),
+    "precision": ({"precision": "bf16"}, "search"),
 }
 _PERTURB_INVARIANT = {
     "k": {"k": 3},

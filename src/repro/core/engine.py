@@ -101,8 +101,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..kernels.common import ceil_div
-from ..kernels.registry import resolve_backend
+from ..kernels.common import ceil_div, exclusion_mask, znorm_d2_formula
+from ..kernels.registry import (bound_dot_radius, get_bound_backend,
+                                quant_scales, resolve_backend)
 from .pan import (PanEngine, canonical_ladder, cross_length_ub,
                   global_normalized_topk, ladder_lb_margin, pan_lanes,
                   pan_rung_shares, pan_tail_sweep)
@@ -119,10 +120,11 @@ __all__ = ["DiscordEngine", "DiscordStream", "PanStream", "EngineStats",
 
 # -- SearchSpec keying contract (audited by repro.analysis.speckey) ----
 #: spec fields that reach every plan-cache key: ``backend``/``znorm``/
-#: ``block`` through the ``_plan_key`` prefix, ``s`` through each
-#: kind's own key element, ``ndev`` through the mesh-shape element of
-#: the sharded kinds
-PLAN_KEY_FIELDS = ("s", "backend", "znorm", "block", "ndev")
+#: ``block``/``precision`` through the ``_plan_key`` prefix, ``s``
+#: through each kind's own key element, ``ndev`` through the
+#: mesh-shape element of the sharded kinds
+PLAN_KEY_FIELDS = ("s", "backend", "znorm", "block", "ndev",
+                   "precision")
 #: spec fields that select *which* plan kind runs — the kind string
 #: leading every key carries them
 KIND_DISPATCH_FIELDS = ("method",)
@@ -181,6 +183,14 @@ def _bucket_pad(x, Lb: int, rows: Optional[int] = None) -> np.ndarray:
                  PAD_FILL, np.float32)
     xp[:x.shape[0], :x.shape[1]] = x
     return xp
+
+
+def _win_norms(win):
+    """f32 L2 norm of each window row, computed fresh from the rows —
+    the quantized bound pass must not reuse the cumsum-derived norm
+    pads (their cancellation error would poison the certified error
+    radius; docs/ARCHITECTURE.md)."""
+    return jnp.sqrt(jnp.sum(win * win, axis=1))
 
 
 def ring_series_threshold() -> int:
@@ -376,14 +386,14 @@ class DiscordEngine:
 
     def _plan_key(self, key):
         """Full cache key of a plan: the session-invariant spec prefix
-        (``backend``/``znorm``/``block`` — everything a compiled tile
-        sweep closes over besides the per-kind geometry) + the kind's
-        own key.  The prefix is what lets the shared cross-tenant
-        cache (``repro.serve.DiscordServer``'s ``PlanCache``) merge
-        engine caches without collisions; the speckey audit
-        (docs/analysis.md) checks it stays complete."""
-        return (self.backend, self.spec.znorm, self.spec.block) \
-            + tuple(key)
+        (``backend``/``znorm``/``block``/``precision`` — everything a
+        compiled tile sweep closes over besides the per-kind geometry)
+        + the kind's own key.  The prefix is what lets the shared
+        cross-tenant cache (``repro.serve.DiscordServer``'s
+        ``PlanCache``) merge engine caches without collisions; the
+        speckey audit (docs/analysis.md) checks it stays complete."""
+        return (self.backend, self.spec.znorm, self.spec.block,
+                self.spec.precision) + tuple(key)
 
     @property
     def _plans(self):
@@ -589,6 +599,255 @@ class DiscordEngine:
                                (stack, n_valid0))
             return fn
         return self._get_plan(("pan_mb", ladder, Lb, B), build)
+
+    # -- quantized-sweep plan family (bf16/int8 bound + f32 refine) ----
+    def _qsweep_bracket(self, s: int, eng: TileEngine, bound_dot,
+                        q, c, nq, nc, sq=None, sc=None):
+        """Certified f32 bracket ``(d2_lo, d2_hi)`` of the exact-f32
+        tile d² for one query block vs one candidate block.
+
+        The bound backend returns reduced-precision dots with
+        ``|dots_low - dots_f32| <= rad``
+        (``kernels.registry.bound_dot_radius``); d² is monotone
+        *decreasing* in the dots through Eq. (3) (σ > 0) and through
+        the raw-mode inversion (its clamps are monotone), and f32
+        evaluation of the monotone formula pipeline is itself weakly
+        monotone — so evaluating the exact pipeline at ``dots ± rad``
+        brackets the f32 tile value, not just the real-valued
+        distance (full derivation: docs/ARCHITECTURE.md)."""
+        spec, prec = self.spec, self.spec.precision
+        if prec == "int8":
+            dots = bound_dot(q.win, c.win, precision=prec,
+                             sq=sq, sc=sc)
+            rad = bound_dot_radius(prec, nq, nc, s, sq, sc)
+        else:
+            dots = bound_dot(q.win, c.win, precision=prec)
+            rad = bound_dot_radius(prec, nq, nc, s)
+        bad = exclusion_mask(q.ids, c.ids, s, eng.n)
+
+        def d2_of(dd):
+            d2 = znorm_d2_formula(dd, s, q.mu, q.sig, c.mu, c.sig)
+            d2 = jnp.where(bad, jnp.inf, d2)
+            if not spec.znorm:
+                d2 = eng._raw_d2(d2, q.ids, c.ids)
+            return d2
+        return d2_of(dots + rad), d2_of(dots - rad)
+
+    def _qsweep_bound_body(self, s: int):
+        """Reduced-precision bound pass shared by the local and
+        mesh-sharded qsweep plans: ``body(series_pad, n_valid,
+        starts) -> (lo, hi)``, per listed query block a
+        ``(len(starts), block)`` bracket of each row's profile value
+        with ``lo <= exact-f32-profile d² <= hi`` per window."""
+        spec, be, prec = self.spec, self.backend, self.spec.precision
+        bound_dot = get_bound_backend(be)
+
+        def body(series_pad, n_valid, starts):
+            eng = TileEngine(series_pad, s, block=spec.block,
+                             backend=be, znorm=spec.znorm,
+                             n_valid=n_valid)
+            cand = eng.all_windows()
+            nc = _win_norms(cand.win)
+            sc = quant_scales(cand.win) if prec == "int8" else None
+
+            def one_block(b0):
+                q = eng.contiguous_block(b0)
+                nq = _win_norms(q.win)
+                sq = quant_scales(q.win) if prec == "int8" else None
+                lo, hi = self._qsweep_bracket(s, eng, bound_dot, q,
+                                              cand, nq, nc, sq, sc)
+                return jnp.min(lo, axis=1), jnp.min(hi, axis=1)
+            return lax.map(one_block, starts)
+        return body
+
+    def _qsweep_plan(self, s: int, Lb: int):
+        """(series_pad (Lb,), n_valid) -> (lo_d2 (n_pad,), hi_d2).
+
+        The quantized bound pass of the two-phase search
+        (docs/cps.md): per window a certified bracket of the exact
+        f32 profile value.  The host prunes whole query blocks whose
+        upper bounds cannot reach the top-k and refines the rest
+        through ``("qsweep_refine", ...)``.
+        """
+        spec = self.spec
+        nb = self._n_pad(s, Lb) // spec.block
+        body = self._qsweep_bound_body(s)
+
+        def build():
+            def fn(series_pad, n_valid):
+                self.stats.traces += 1
+                starts = (jnp.arange(nb, dtype=jnp.int32)
+                          * spec.block)
+                lo, hi = body(series_pad, n_valid, starts)
+                return lo.reshape(-1), hi.reshape(-1)
+            return fn
+        return self._get_plan(("qsweep", s, Lb), build)
+
+    def _qsweep_refine_plan(self, s: int, Lb: int):
+        """(series_pad (Lb,), b2 (2,), n_valid) ->
+            (d2 (2, block), ngh).
+
+        Exact f32 re-sweep of a *pair* of query blocks against every
+        candidate — the same ``TileEngine`` block row the
+        ``("profile", ...)`` plan's ``lax.map`` body computes, re-run
+        verbatim so refined rows are bit-identical to a full profile
+        sweep's.  The block starts are traced operands
+        (``contiguous_block`` slices dynamically), so one compiled
+        plan refines any pair: zero retraces across the escalation
+        loop.  The fixed trip count of 2 is load-bearing: XLA unrolls
+        trip-count-1 loops into the enclosing computation and re-fuses
+        the math into ulp-different results (observed in raw mode),
+        while any preserved loop compiles the shared scan body
+        identically — callers duplicate a start to pad odd refinement
+        sets, and buckets with fewer than two blocks take the exact
+        plans outright.
+        """
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, b2, n_valid):
+                self.stats.traces += 1
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                cand = eng.all_windows()
+
+                def one_block(b):
+                    q = eng.contiguous_block(b)
+                    d2 = eng.d2(q, cand)
+                    return (jnp.min(d2, axis=1),
+                            jnp.argmin(d2, axis=1).astype(jnp.int32))
+
+                return lax.map(one_block, b2)
+            return fn
+        return self._get_plan(("qsweep_refine", s, Lb), build)
+
+    def _qsweep_sharded_plan(self, s: int, Lb: int):
+        """(series_pad (Lb,), n_valid) -> (lo_d2 (nb_p*block,), hi_d2).
+
+        Mesh-sharded bound pass: the query row-blocks are sharded
+        across the device mesh (candidates replicated — the same row
+        decomposition as ``("pan_ring", ...)``), each device running
+        the shared reduced-precision bound body over its own starts.
+        Refinement stays local (``("qsweep_refine", ...)``):
+        survivors are a small block subset by construction, and the
+        local f32 re-sweep keeps refined values bit-identical to the
+        local profile plan's regardless of mesh shape.
+        """
+        spec = self.spec
+        mesh = self._resolve_mesh()
+        ndev = int(mesh.devices.size)
+        n_pad = self._n_pad(s, Lb)
+        nb_p = ceil_div(n_pad // spec.block, ndev) * ndev
+        body = self._qsweep_bound_body(s)
+
+        def build():
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .distributed import AXIS
+
+            def shard_body(starts, series_pad, n_valid):
+                return body(series_pad, n_valid[0], starts)
+
+            sweep = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(P(AXIS), P(None), P(None)),
+                out_specs=(P(AXIS, None), P(AXIS, None)),
+                check_rep=False)
+
+            def fn(series_pad, n_valid):
+                self.stats.traces += 1
+                starts = (jnp.arange(nb_p, dtype=jnp.int32)
+                          * spec.block)
+                lo, hi = sweep(starts, series_pad,
+                               jnp.full((1,), n_valid, jnp.int32))
+                return lo.reshape(-1), hi.reshape(-1)
+            return fn
+        return self._get_plan(("qsweep_ring", s, Lb, (ndev,)), build)
+
+    def _qsweep_tail_plan(self, s: int, Lb: int, Qb: int):
+        """Quantized streaming-append bound pass.
+
+        (series_pad (Lb,), q0, n_valid) ->
+            (row_lo (nb, Qb), row_hi (nb, Qb), col_lo (n_pad,))
+
+        Per candidate block ``b``: ``row_lo[b]`` / ``row_hi[b]``
+        bracket each tail row's min over that block's candidates, and
+        ``col_lo`` lower-bounds each existing window's best distance
+        to the new tail windows.  The host
+        (``DiscordStream._qtail_fold``) refines only the candidate
+        blocks that can matter, through
+        ``("qsweep_tail_refine", ...)``.
+        """
+        spec, be, prec = self.spec, self.backend, self.spec.precision
+        bound_dot = get_bound_backend(be)
+        nb = self._n_pad(s, Lb) // spec.block
+
+        def build():
+            def fn(series_pad, q0, n_valid):
+                self.stats.traces += 1
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+                q = eng.query_block(qids)
+                nq = _win_norms(q.win)
+                sq = quant_scales(q.win) if prec == "int8" else None
+                starts = (jnp.arange(nb, dtype=jnp.int32)
+                          * eng.block)
+
+                def one(c0):
+                    c = eng.contiguous_block(c0)
+                    nc = _win_norms(c.win)
+                    sc = (quant_scales(c.win) if prec == "int8"
+                          else None)
+                    lo, hi = self._qsweep_bracket(
+                        s, eng, bound_dot, q, c, nq, nc, sq, sc)
+                    return (jnp.min(lo, axis=1),
+                            jnp.min(hi, axis=1),
+                            jnp.min(lo, axis=0))
+
+                rlo, rhi, clo = lax.map(one, starts)
+                return rlo, rhi, clo.reshape(-1)
+            return fn
+        return self._get_plan(("qsweep_tail", s, Lb, Qb), build)
+
+    def _qsweep_tail_refine_plan(self, s: int, Lb: int, Qb: int):
+        """(series_pad (Lb,), q0, n_valid, c2 (2,)) ->
+            (rm (2, Qb), ra, cm (2, block), ca).
+
+        Exact f32 tail sweep of the ``Qb`` tail queries against a
+        *pair* of candidate blocks — the ``("tail", ...)`` plan's
+        per-block ``lax.map`` body re-run verbatim (same shapes, same
+        reduction order), so refined tail rows and columns are
+        bit-identical to the full exact tail sweep's.  The traced
+        pair of starts keeps one compiled plan serving every
+        refinement; the fixed trip count of 2 preserves the scan (see
+        ``_qsweep_refine_plan`` — XLA unrolls trip-count-1 loops and
+        drifts by ulps).
+        """
+        spec, be = self.spec, self.backend
+
+        def build():
+            def fn(series_pad, q0, n_valid, c2):
+                self.stats.traces += 1
+                eng = TileEngine(series_pad, s, block=spec.block,
+                                 backend=be, znorm=spec.znorm,
+                                 n_valid=n_valid)
+                qids = q0 + jnp.arange(Qb, dtype=jnp.int32)
+                q = eng.query_block(qids)
+
+                def one(c):
+                    d2, cid = eng.sweep(q, c)
+                    return (jnp.min(d2, axis=1),
+                            cid[jnp.argmin(d2, axis=1)],
+                            jnp.min(d2, axis=0),
+                            q.ids[jnp.argmin(d2, axis=0)])
+
+                return lax.map(one, c2)
+            return fn
+        return self._get_plan(("qsweep_tail_refine", s, Lb, Qb),
+                              build)
 
     # -- mesh-sharded plan family (the ring fold-in) -------------------
     def _shard_geom(self, s: int, Lb: int, ndev: int):
@@ -1022,12 +1281,16 @@ class DiscordEngine:
                 raise TypeError("matrix_profile search is fully "
                                 "described by the spec and takes no "
                                 f"extra kwargs, got {sorted(kw)}")
+            if spec.precision != "f32":
+                return self._search_qsweep(series, spec.s)
             return self._search_profile(series, spec.s)
         if spec.method == "ring":
             if kw:
                 raise TypeError("ring search is fully described by "
                                 "the spec and mesh placement and takes "
                                 f"no extra kwargs, got {sorted(kw)}")
+            if spec.precision != "f32":
+                return self._search_qsweep_ring(series)
             self.stats.searches += 1
             return self._search_ring(series)
         return self._dispatch(series, **kw)
@@ -1059,6 +1322,152 @@ class DiscordEngine:
             runtime_s=time.perf_counter() - t0, tile_lanes=lanes,
             extra={"backend": self.backend, "bucket": Lb,
                    "tile_lanes": lanes, "znorm": self.spec.znorm})
+
+    def _qsweep_select(self, lo_d2, hi_d2, n_true: int, s: int,
+                       refine):
+        """Host-side escalation select of the two-phase quantized
+        search: certified per-window brackets in, *exact* top-k out.
+
+        ``refine_many(bs)`` runs the f32 refinement plan over the
+        listed query blocks (the caller pairs them up for the fixed-
+        trip-count plan) and yields ``(b, d2_row)`` pairs whose rows
+        are bit-identical to the full ``("profile", ...)`` sweep's.
+
+        Soundness/exactness: unrefined rows score at their certified
+        upper bound (``+inf`` when the bound overflowed — forced
+        refinement), refined rows at their exact value, so the greedy
+        composed profile is pointwise >= the exact one and equal on
+        refined rows; once every greedy pick is refined, first-index
+        ``np.argmax`` induction makes the pick sequence identical to
+        running ``topk_nonoverlapping`` on the fully exact profile
+        (derivation: docs/ARCHITECTURE.md).  Returns
+        ``(pos, vals, n_refined_blocks, nb_live)``.
+        """
+        k, block = self.spec.k, self.spec.block
+        refine_many = refine
+        lo = np.asarray(lo_d2, np.float64)[:n_true]
+        hi = np.asarray(hi_d2, np.float64)[:n_true]
+        # lower-bound profile: nonfinite rows can never seed the
+        # threshold; upper-bound profile: nonfinite rows must refine
+        lb = np.where(np.isfinite(lo),
+                      np.sqrt(np.maximum(lo, 0.0)), -np.inf)
+        ub = np.where(np.isfinite(hi),
+                      np.sqrt(np.maximum(hi, 0.0)), np.inf)
+        nb_live = ceil_div(n_true, block)
+        refined = np.zeros(nb_live, bool)
+        score = ub.copy()
+
+        def do_refine(bs):
+            bs = [b for b in bs if not refined[b]]
+            for b, d2b in refine_many(bs):
+                j0 = b * block
+                n_rows = min(block, n_true - j0)
+                prof = np.sqrt(np.asarray(d2b, np.float64)[:n_rows])
+                score[j0:j0 + n_rows] = np.where(
+                    np.isfinite(prof), prof, -np.inf)
+                refined[b] = True
+
+        # seed round: the k-th greedy pick on the lower-bound profile
+        # is a certified threshold — every block whose upper bounds
+        # all fall below it can never reach the top-k
+        _, svals = topk_nonoverlapping(lb, k, s)
+        thr = svals[k - 1] if len(svals) >= k else -np.inf
+        do_refine([b for b in range(nb_live)
+                   if np.any(ub[b * block:
+                                min(b * block + block, n_true)]
+                             >= thr)])
+
+        # escalation loop: refine any block holding an unrefined
+        # greedy pick until the whole pick sequence is exact
+        while True:
+            pos, vals = topk_nonoverlapping(score, k, s)
+            need = sorted({int(p) // block for p in pos
+                           if not refined[int(p) // block]})
+            if not need:
+                return pos, vals, int(refined.sum()), nb_live
+            do_refine(need)
+
+    def _qsweep_exec(self, series, s: int, bound_plan_lanes):
+        """Shared driver of the local and ring quantized searches:
+        bucket/pad, bound pass via ``bound_plan_lanes(s, Lb) ->
+        (plan, bound_lanes)``, escalation select, hybrid accounting.
+        Returns everything the result constructors need — or ``None``
+        when the bucket holds fewer than two query blocks, where
+        pruning is vacuous and the trip-count-2 refinement plan could
+        not match the (unrolled) exact sweep; callers fall back to
+        the exact f32 search (trivially bit-identical)."""
+        spec = self.spec
+        x = np.asarray(series, np.float64).ravel()
+        L = x.shape[0]
+        if L < s + 1:
+            raise ValueError(f"series of {L} points is too short for "
+                             f"window spec.s={s} (need at least "
+                             f"s + 1 points)")
+        n_true = L - s + 1
+        Lb = length_bucket(L)
+        n_pad = self._n_pad(s, Lb)
+        if n_pad // spec.block < 2:
+            return None
+        xp = jnp.asarray(_bucket_pad(x, Lb))
+        nv = np.int32(n_true)
+        plan, bound_lanes = bound_plan_lanes(s, Lb)
+        lo, hi = plan(xp, nv)
+        rplan = self._qsweep_refine_plan(s, Lb)
+        ncalls = 0
+
+        def refine_many(bs):
+            nonlocal ncalls
+            for i in range(0, len(bs), 2):
+                pair = bs[i:i + 2]
+                padded = (pair if len(pair) == 2
+                          else (pair[0], pair[0]))
+                b2 = jnp.asarray(np.array(padded, np.int32)
+                                 * spec.block)
+                d2p, _ngh = rplan(xp, b2, nv)
+                ncalls += 1
+                d2p = np.asarray(d2p, np.float64)
+                for lane, b in enumerate(pair):
+                    yield b, d2p[lane]
+
+        pos, vals, n_ref, nb_live = self._qsweep_select(
+            lo, hi, n_true, s, refine_many)
+        # honest lanes: every executed refinement call sweeps a pair
+        # of (block x n_pad) tiles, duplicate padding included
+        refine_lanes = ncalls * 2 * spec.block * n_pad
+        self.stats.tile_lanes += bound_lanes + refine_lanes
+        prune = 1.0 - (n_ref / nb_live if nb_live else 0.0)
+        extra = {"backend": self.backend, "bucket": Lb,
+                 "precision": spec.precision,
+                 "tile_lanes": bound_lanes,
+                 "bound_lanes": bound_lanes,
+                 "refine_calls": refine_lanes,
+                 "refined_blocks": n_ref, "blocks": nb_live,
+                 "prune_ratio": prune, "znorm": spec.znorm}
+        return pos, vals, bound_lanes, refine_lanes, n_true, extra
+
+    def _search_qsweep(self, series, s: int) -> DiscordResult:
+        """Quantized two-phase search (docs/cps.md): reduced-precision
+        bound pass over every pair, host-side certified prune, f32
+        refinement of the surviving query blocks only.  Positions and
+        nnds are bit-identical to ``_search_profile``'s; only the
+        lane accounting moves (``calls = tile_lanes +
+        refine_calls``)."""
+        t0 = time.perf_counter()
+
+        def bound_plan_lanes(s_, Lb):
+            return (self._qsweep_plan(s_, Lb),
+                    self._n_pad(s_, Lb) ** 2)
+
+        out = self._qsweep_exec(series, s, bound_plan_lanes)
+        if out is None:      # single-block bucket: exact outright
+            return self._search_profile(series, s)
+        pos, vals, bl, rl, n_true, extra = out
+        self.stats.searches += 1
+        return DiscordResult(
+            positions=pos, nnds=vals, calls=bl + rl, n=n_true, s=s,
+            method=f"qsweep[{self.spec.precision}|{self.backend}]",
+            runtime_s=time.perf_counter() - t0, tile_lanes=bl,
+            extra=extra)
 
     def _ring_exec(self, s: int, Lb: int, series_pad, n_valid):
         """One ring-plan invocation — the single source of the mesh
@@ -1106,6 +1515,37 @@ class DiscordEngine:
             runtime_s=time.perf_counter() - t0, tile_lanes=lanes,
             extra={"backend": self.backend, "bucket": Lb, "ndev": ndev,
                    "tile_lanes": lanes, "znorm": self.spec.znorm})
+
+    def _search_qsweep_ring(self, series) -> DiscordResult:
+        """Quantized ring search: mesh-sharded bound pass
+        (``("qsweep_ring", ...)``) + local f32 refinement.  Bit-
+        identical positions/nnds to the refinement plan's local
+        profile on every mesh shape (refined values never cross the
+        mesh); bumps ``stats.searches`` itself."""
+        t0 = time.perf_counter()
+        spec = self.spec
+        s = spec.s
+        ndev = int(self._resolve_mesh().devices.size)
+
+        def bound_plan_lanes(s_, Lb):
+            n_pad = self._n_pad(s_, Lb)
+            q_sh = (ceil_div(n_pad // spec.block, ndev) * ndev
+                    * spec.block)
+            return self._qsweep_sharded_plan(s_, Lb), q_sh * n_pad
+
+        out = self._qsweep_exec(series, s, bound_plan_lanes)
+        if out is None:      # single-block bucket: exact outright
+            self.stats.searches += 1
+            return self._search_ring(series)
+        pos, vals, bl, rl, n_true, extra = out
+        extra["ndev"] = ndev
+        self.stats.searches += 1
+        return DiscordResult(
+            positions=pos, nnds=vals, calls=bl + rl, n=n_true, s=s,
+            method=(f"qsweep_ring[{spec.precision}|{ndev}dev|"
+                    f"{self.backend}]"),
+            runtime_s=time.perf_counter() - t0, tile_lanes=bl,
+            extra=extra)
 
     # -- pan-length (window-ladder) searches ---------------------------
     def _pan_finish(self, x, lad, d2s, *, lanes, cells, Lb, ndev,
@@ -1494,6 +1934,8 @@ class DiscordEngine:
         if L < s + 1:
             raise ValueError(f"series of {L} points is too short for "
                              f"window spec.s={s}")
+        if spec.precision != "f32":
+            return self._search_batched_qsweep(xb, t0)
         if self.sharded:
             return self._search_batched_sharded(xb, t0)
         n_true = L - s + 1
@@ -1519,6 +1961,32 @@ class DiscordEngine:
                        "backend": self.backend, "bucket": Lb,
                        "per_series_s": elapsed / B,
                        "tile_lanes": lanes}))
+        return out
+
+    def _search_batched_qsweep(self, xb: np.ndarray, t0: float
+                               ) -> List[DiscordResult]:
+        """Batched quantized layout: the prune/refine escalation is
+        per-series host control flow, so the quantized batch runs
+        series-after-series through the single-series two-phase
+        drivers (ring-sharded bound pass on meshed sessions, local
+        otherwise) — every series reuses the same two cached plans.
+        One API call counts as one search, like the other batched
+        layouts, and timing is honest (true per-batch wall clock on
+        every result)."""
+        s = self.spec.s
+        B = xb.shape[0]
+        one = (self._search_qsweep_ring if self.sharded
+               else lambda x: self._search_qsweep(x, s))
+        out = [one(xb[b]) for b in range(B)]
+        elapsed = time.perf_counter() - t0
+        total = sum(r.calls for r in out)
+        self.stats.searches -= B - 1
+        for b, r in enumerate(out):
+            r.runtime_s = elapsed
+            r.extra.update(batch_size=B, batch_index=b,
+                           layout="qsweep-per-series",
+                           per_series_s=elapsed / B,
+                           batch_tile_lanes=total)
         return out
 
     def _search_batched_sharded(self, xb: np.ndarray, t0: float
@@ -1772,11 +2240,18 @@ class DiscordStream:
         # inversion): raw streams on a sharded session fall back to
         # the local plans, which handle znorm=False exactly
         self._sharded = engine.sharded and engine.spec.znorm
+        # quantized streams (spec.precision != "f32") run the exact
+        # fill, then every tail through the ("qsweep_tail", ...)
+        # bound pass + per-block f32 refinement (docs/cps.md)
+        self._quant = engine.spec.precision != "f32"
         self._x = np.zeros(0, np.float64)
         self._d2 = np.zeros(0, np.float64)
         self._ngh = np.zeros(0, np.int64)
         self.appends = 0
         self.tile_lanes = 0
+        self.refine_calls = 0
+        self._qtail_blocks = 0
+        self._qtail_refined = 0
         if history is not None and np.asarray(history).size:
             self.append(history)
 
@@ -1835,6 +2310,17 @@ class DiscordStream:
                     "n_new": n_new, "lanes": lanes}
         n_tail = n_new - n_old
         Qb = length_bucket(n_tail, lo=32)
+        if self._quant and eng._n_pad(s, Lb) // eng.spec.block >= 2:
+            # quantized tail: local bound pass + per-block f32
+            # refinement — the host escalation needs per-block
+            # control flow, so the quant tail never shards (the
+            # sharded fill above still does).  Single-block buckets
+            # fall through to the exact tail (pruning is vacuous and
+            # the trip-count-2 refine plan needs a preserved loop).
+            return {"kind": "qtail", "s": s, "Lb": Lb, "Qb": Qb,
+                    "xp": xp, "q0": n_old, "n_new": n_new,
+                    "n_tail": n_tail,
+                    "lanes": Qb * eng._n_pad(s, Lb)}
         lanes = Qb * (eng._shard_geom(s, Lb, ndev)[2] if self._sharded
                       else eng._n_pad(s, Lb))
         return {"kind": "tail", "s": s, "Lb": Lb, "Qb": Qb, "xp": xp,
@@ -1853,6 +2339,11 @@ class DiscordStream:
                 return d2, arg
             return eng._profile_plan(op["s"], op["Lb"])(
                 jnp.asarray(op["xp"]), np.int32(op["n_new"]))
+        if op["kind"] == "qtail":
+            return eng._qsweep_tail_plan(op["s"], op["Lb"],
+                                         op["Qb"])(
+                jnp.asarray(op["xp"]), np.int32(op["q0"]),
+                np.int32(op["n_new"]))
         plan = (eng._tail_sharded_plan(op["s"], op["Lb"], op["Qb"])
                 if self._sharded
                 else eng._tail_plan(op["s"], op["Lb"], op["Qb"]))
@@ -1867,6 +2358,8 @@ class DiscordStream:
             d2, arg = out
             self._d2 = np.asarray(d2, np.float64)[:n_new]
             self._ngh = np.asarray(arg, np.int64)[:n_new]
+        elif op["kind"] == "qtail":   # quantized tail: bound + refine
+            self._qtail_fold(op, out)
         else:                         # tail sweep only
             rd2, rngh, cd2, cngh = out
             n_tail = op["n_tail"]
@@ -1886,6 +2379,88 @@ class DiscordStream:
         eng.stats.appends += 1
         eng.stats.tile_lanes += lanes
         return self
+
+    def _qtail_fold(self, op: dict, out) -> None:
+        """Host fold of one quantized tail op: certified brackets in,
+        the *exact* tail fold out.
+
+        Row side: candidate block ``b`` can hold a live tail row's
+        minimum only if ``rlo[b, i] <= row_ub[i] = min_b' rhi[b', i]``
+        for some live row ``i`` (pad rows are +inf everywhere and
+        must not widen the criterion) — excluded blocks sit strictly
+        above every live row minimum, so the first-min fold over the
+        refined subset (ascending block order) equals the full
+        ``argmin(rm, axis=0)`` fold of ``_tail_body``, neighbor
+        tie-breaks included.  Column side: candidate ``j`` can only
+        improve an old nnd when its certified lower bound undercuts
+        the current profile (``clo[j] < d2[j]``); a skipped block's
+        exact ``cm >= clo >= d2`` makes the strict min-fold a no-op.
+        Derivation: docs/ARCHITECTURE.md.
+        """
+        eng = self.engine
+        s, Lb, Qb = op["s"], op["Lb"], op["Qb"]
+        n_new, n_tail = op["n_new"], op["n_tail"]
+        block = eng.spec.block
+        rlo, rhi, clo = (np.asarray(a, np.float64) for a in out)
+        nb = rlo.shape[0]
+        xp = jnp.asarray(op["xp"])
+        q0, nv = np.int32(op["q0"]), np.int32(n_new)
+        rplan = eng._qsweep_tail_refine_plan(s, Lb, Qb)
+        refined: dict = {}
+        ncalls = 0
+
+        def refine_many(bs):
+            nonlocal ncalls
+            bs = [int(b) for b in bs if int(b) not in refined]
+            for i in range(0, len(bs), 2):
+                pair = bs[i:i + 2]
+                padded = (pair if len(pair) == 2
+                          else (pair[0], pair[0]))
+                c2 = jnp.asarray(np.array(padded, np.int32) * block)
+                arrs = [np.asarray(a, np.float64)
+                        for a in rplan(xp, q0, nv, c2)]
+                ncalls += 1
+                for lane, b in enumerate(pair):
+                    refined[b] = [a[lane] for a in arrs]
+
+        row_ub = np.min(rhi[:, :n_tail], axis=0)
+        need = np.any(rlo[:, :n_tail] <= row_ub[None, :], axis=1)
+        refine_many(np.flatnonzero(need))
+        rbs = sorted(refined)
+        rm = np.stack([refined[b][0] for b in rbs])
+        ra = np.stack([refined[b][1] for b in rbs])
+        sel = np.argmin(rm, axis=0)
+        cols = np.arange(Qb)
+        row_d2 = rm[sel, cols][:n_tail]
+        row_ngh = ra[sel, cols][:n_tail]
+        d2 = np.concatenate([self._d2, row_d2])
+        ngh = np.concatenate([self._ngh, row_ngh.astype(np.int64)])
+        refine_many([b for b in range(nb)
+                     if (b * block < n_new
+                         and np.any(clo[b * block:
+                                        min(b * block + block,
+                                            n_new)]
+                                    < d2[b * block:
+                                         min(b * block + block,
+                                             n_new)]))])
+        for b in sorted(refined):
+            j0, j1 = b * block, min(b * block + block, n_new)
+            if j1 <= j0:
+                continue
+            cm = refined[b][2][:j1 - j0]
+            ca = refined[b][3][:j1 - j0].astype(np.int64)
+            better = cm < d2[j0:j1]
+            d2[j0:j1] = np.where(better, cm, d2[j0:j1])
+            ngh[j0:j1] = np.where(better, ca, ngh[j0:j1])
+        self._d2, self._ngh = d2, ngh
+        # hybrid accounting (docs/cps.md): the op's ``lanes`` are the
+        # bound pass; each refinement call pays a pair of exact
+        # (Qb x block) tiles, duplicate padding included
+        r_lanes = ncalls * 2 * Qb * block
+        self.refine_calls += r_lanes
+        self._qtail_blocks += nb
+        self._qtail_refined += len(refined)
+        eng.stats.tile_lanes += r_lanes
 
     def append(self, points) -> "DiscordStream":
         """Fold new points into the profile, sweeping only the tail."""
@@ -1908,14 +2483,23 @@ class DiscordStream:
         prof = self.profile()
         pos, vals = topk_nonoverlapping(
             np.where(np.isfinite(prof), prof, -np.inf), k, self.s)
+        extra = {"appends": self.appends,
+                 "tile_lanes": self.tile_lanes,
+                 "backend": self.engine.backend}
+        if self._quant:
+            extra.update(
+                precision=self.engine.spec.precision,
+                refine_calls=self.refine_calls,
+                prune_ratio=(1.0 - self._qtail_refined
+                             / self._qtail_blocks
+                             if self._qtail_blocks else 0.0))
         return DiscordResult(
-            positions=pos, nnds=vals, calls=self.tile_lanes,
+            positions=pos, nnds=vals,
+            calls=self.tile_lanes + self.refine_calls,
             n=self.n_windows, s=self.s,
             method=f"stream[{self.engine.backend}]",
             tile_lanes=self.tile_lanes,
-            extra={"appends": self.appends,
-                   "tile_lanes": self.tile_lanes,
-                   "backend": self.engine.backend})
+            extra=extra)
 
 
 class PanStream:
@@ -2156,7 +2740,8 @@ class PlanKindAudit:
     kind: str
     family: str          # "local" | "mb" | "ring"
     pan: bool            # pan-ladder kind (multi-width dot pattern)
-    spec_template: str   # "mp" | "pan" | "ring" | "mp_ndev" | "pan_ndev"
+    spec_template: str   # "mp" | "pan" | "ring" | "mp_ndev" |
+    #                      "pan_ndev" | "qsweep" | "qsweep_ndev"
     builder: str         # DiscordEngine plan-builder method name
     build_args: tuple    # builder arguments at the pinned geometry
     avals: tuple         # ((shape, dtype-name), ...) abstract inputs
@@ -2204,6 +2789,9 @@ def plan_kind_registry(*, s: int = 24, ladder=(16, 24, 32),
     p_pad = plan_pad_geom(lad[0], Lb, block)
     _, p_per, p_sh = plan_shard_geom(lad[0], Lb, block, ndev)
     _, nb_p = plan_pan_row_geom(lad, Lb, block, ndev)
+    # quantized-sweep row geometry: the sharded bound pass pads the
+    # query blocks to a device multiple (q_sh rows total)
+    q_sh = ceil_div(n_pad // block, ndev) * ndev * block
     Bp = ceil_div(B, ndev) * ndev
     #: per-site contraction widths of one pan sweep: full base width,
     #: then each rung's extension
@@ -2229,6 +2817,27 @@ def plan_kind_registry(*, s: int = 24, ladder=(16, 24, 32),
             "tail", "local", False, "mp", "_tail_plan",
             (s, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
             ((Qb * n_pad, s),), (((0,), s),), 1, Qb * n_pad),
+        PlanKindAudit(
+            "qsweep", "local", False, "qsweep", "_qsweep_plan",
+            (s, Lb), (((Lb,), f32), ((), i32)),
+            ((n_pad * n_pad, s),), (((0,), s),), 1, n_pad ** 2),
+        PlanKindAudit(
+            "qsweep_refine", "local", False, "qsweep",
+            "_qsweep_refine_plan",
+            (s, Lb), (((Lb,), f32), ((2,), i32), ((), i32)),
+            ((2 * block * n_pad, s),), (((0,), s),), 1,
+            2 * block * n_pad),
+        PlanKindAudit(
+            "qsweep_tail", "local", False, "qsweep",
+            "_qsweep_tail_plan",
+            (s, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
+            ((Qb * n_pad, s),), (((0,), s),), 1, Qb * n_pad),
+        PlanKindAudit(
+            "qsweep_tail_refine", "local", False, "qsweep",
+            "_qsweep_tail_refine_plan",
+            (s, Lb, Qb),
+            (((Lb,), f32), ((), i32), ((), i32), ((2,), i32)),
+            ((2 * Qb * block, s),), (((0,), s),), 1, 2 * Qb * block),
         PlanKindAudit(
             "pan", "local", True, "pan", "_pan_plan",
             (lad, Lb), (((Lb,), f32), ((), i32)),
@@ -2293,6 +2902,11 @@ def plan_kind_registry(*, s: int = 24, ladder=(16, 24, 32),
             "tail_ring", "ring", False, "mp_ndev", "_tail_sharded_plan",
             (s, Lb, Qb), (((Lb,), f32), ((), i32), ((), i32)),
             ((Qb * n_sh, s),), (((0,), s),), 1, Qb * n_sh),
+        PlanKindAudit(
+            "qsweep_ring", "ring", False, "qsweep_ndev",
+            "_qsweep_sharded_plan",
+            (s, Lb), (((Lb,), f32), ((), i32)),
+            ((q_sh * n_pad, s),), (((0,), s),), 1, q_sh * n_pad),
         PlanKindAudit(
             "pan_ring", "ring", True, "pan_ndev", "_pan_sharded_plan",
             (lad, Lb), (((Lb,), f32), ((), i32)),

@@ -26,7 +26,7 @@ from typing import Optional, Tuple, Union
 
 __all__ = ["SearchSpec", "canonical_method", "length_bucket",
            "SERIAL_METHODS", "JAX_METHODS", "METHOD_ALIASES",
-           "RAW_CAPABLE"]
+           "RAW_CAPABLE", "PRECISIONS"]
 
 #: paper-faithful serial implementations (exact distance-call counting)
 SERIAL_METHODS = ("brute", "hotsax", "hst", "dadd", "rra")
@@ -42,6 +42,10 @@ METHOD_ALIASES = {
 #: methods that honor znorm=False (everything else is Eq. (3)-only and
 #: would silently z-normalize — rejected at spec validation)
 RAW_CAPABLE = ("brute", "hst", "matrix_profile")
+#: tile sweep precisions: "f32" is the exact baseline; "bf16"/"int8"
+#: run the quantized bound pass + exact f32 refinement (docs/cps.md) —
+#: results stay bit-identical to "f32", only the lane accounting moves
+PRECISIONS = ("f32", "bf16", "int8")
 
 
 def canonical_method(method: str) -> str:
@@ -100,6 +104,11 @@ class SearchSpec:
             mesh=...)`` instead — a Mesh is a device-topology object,
             not part of the hashable search description (the engine
             keys its plan cache on the mesh *shape*).
+    precision  tile-sweep arithmetic: ``"f32"`` (exact baseline) or
+            ``"bf16"`` / ``"int8"`` — a quantized bound pass prunes
+            candidate pairs wholesale, then f32 refinement of the
+            survivors reproduces the exact result bit for bit
+            (``matrix_profile`` / ``ring`` only; docs/cps.md)
     """
     s: Union[int, Tuple[int, ...]]
     k: int = 1
@@ -112,6 +121,7 @@ class SearchSpec:
     r: Optional[float] = None
     block: int = 256
     ndev: Optional[int] = None
+    precision: str = "f32"
 
     def __post_init__(self):
         # normalize: list/tuple s -> tuple of ints, scalar -> int
@@ -165,6 +175,23 @@ class SearchSpec:
                 "silently z-normalize")
         if self.r is not None and not self.r > 0:
             raise ValueError(f"r must be positive, got {self.r}")
+        object.__setattr__(self, "precision", str(self.precision))
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got "
+                f"{self.precision!r}")
+        if self.precision != "f32":
+            if self.method not in ("matrix_profile", "ring"):
+                raise ValueError(
+                    "reduced precision (bf16/int8 bound pass + f32 "
+                    "refinement) rides the exact-profile plan family "
+                    "(matrix_profile | ring); method="
+                    f"{self.method!r} has no quantized sweep")
+            if self.multi_window:
+                raise ValueError(
+                    "reduced precision does not combine with the "
+                    "pan-length ladder (tuple s) — the ladder has its "
+                    "own LB-abandon prune schedule")
 
     # ------------------------------------------------------------------
     @property

@@ -52,6 +52,26 @@ and the batched (B, ladder) plans.  Register with
 ``@register_dot_backend("name")``; a backend without a registered dot
 tile falls back to the ``xla`` implementation (exact — it is the same
 contraction, just not hand-placed).
+
+The third primitive is the **bound dot tile** of the quantized-sweep
+plane (``SearchSpec(precision="bf16"|"int8")``, docs/cps.md):
+
+    fn(q, c, *, precision, sq=None, sc=None) -> dots_low
+
+a *reduced-precision* approximation of the f32 dot tile — bf16-rounded
+inputs contracted with ``preferred_element_type=f32`` (xla / pallas
+MXU), a per-row-scaled int8 variant accumulated in exact int32, or a
+host NumPy emulation of the same roundings.  It is always paired with
+:func:`bound_dot_radius`, the rigorously derived error radius ``rad``
+such that ``|dots_low - dots_f32| <= rad`` for the f32 tile the exact
+plans would compute on the same inputs (derivation in
+docs/ARCHITECTURE.md §"Quantized bound pass").  The engine turns
+``dots_low ± rad`` into d² bounds through the same monotone Eq. (3)
+pipeline the exact tiles use, prunes lanes whose upper bound cannot
+enter the top-k, and refines survivors in f32 — bit-identical results,
+fewer full-precision lanes.  Register with
+``@register_bound_backend("name")``; unregistered backends fall back
+to the ``xla`` bound tile.
 """
 from __future__ import annotations
 
@@ -72,6 +92,7 @@ TileBackendFn = Callable[..., jnp.ndarray]
 
 _REGISTRY: Dict[str, TileBackendFn] = {}
 _DOT_REGISTRY: Dict[str, TileBackendFn] = {}
+_BOUND_REGISTRY: Dict[str, TileBackendFn] = {}
 _ALIASES = {"jnp": "xla", "ref": "numpy", "np": "numpy"}
 
 ENV_VAR = "REPRO_TILE_BACKEND"
@@ -149,6 +170,24 @@ def get_dot_backend(name: str) -> TileBackendFn:
             f"unknown tile backend {name!r}; available: "
             f"{available_backends()}")
     return _DOT_REGISTRY.get(name, _DOT_REGISTRY["xla"])
+
+
+def register_bound_backend(name: str):
+    """Decorator: add a reduced-precision bound dot tile under
+    ``name``."""
+    def deco(fn: TileBackendFn) -> TileBackendFn:
+        _BOUND_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_bound_backend(name: str) -> TileBackendFn:
+    """Bound dot-tile implementation for ``name`` (xla fallback)."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown tile backend {name!r}; available: "
+            f"{available_backends()}")
+    return _BOUND_REGISTRY.get(name, _BOUND_REGISTRY["xla"])
 
 
 def available_backends() -> tuple:
@@ -319,6 +358,156 @@ def dot_tile_pallas(q, c, *, interpret: bool | None = None):
     blk_q = min(bq_p, BLOCK_Q)
     dots = pl.pallas_call(
         _dot_tile_kernel,
+        grid=(bq_p // blk_q, bc_p // BLOCK_C),
+        in_specs=[
+            pl.BlockSpec((blk_q, w_p), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_C, w_p), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_q, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bq_p, bc_p), jnp.float32),
+        interpret=interpret,
+    )(q, c)
+    return dots[:bq, :bc]
+
+
+# ----------------------------------------------------------------------
+# bound dot-tile backends (quantized sweep: bf16/int8 bound pass)
+# ----------------------------------------------------------------------
+#: per-row int8 scale floor — keeps all-zero (and denormal-flushed)
+#: windows from dividing by zero; a floored row quantizes to all-zero
+#: int8, and the radius formula (which uses the same floored scale)
+#: stays sound
+I8_SCALE_FLOOR = 1e-30
+
+
+def quant_scales(win) -> jnp.ndarray:
+    """Per-row symmetric int8 scale for a window block: ``max|row| /
+    127`` (floored), so ``round(row / scale)`` never clips a live
+    value."""
+    mx = jnp.max(jnp.abs(win), axis=1)
+    return jnp.maximum(mx, I8_SCALE_FLOOR) / 127.0
+
+
+def bound_dot_radius(precision: str, nq, nc, w: int, sq=None, sc=None):
+    """Error radius ``rad`` with ``|dots_low - dots_f32| <= rad``.
+
+    ``nq``/``nc`` are the f32 L2 norms of the query/candidate window
+    rows, ``w`` the (static) contraction width, ``sq``/``sc`` the int8
+    scales from :func:`quant_scales`.  Derivation and the slack-factor
+    accounting (input rounding + both sides' f32 accumulation +
+    norm/formula evaluation rounding + an absolute denormal term) live
+    in docs/ARCHITECTURE.md §"Quantized bound pass"; the soundness
+    property ``d2_lo <= d2_f32 <= d2_hi`` is enforced per backend x
+    znorm mode by tests/test_quantized.py.
+    """
+    w = int(w)
+    outer = nq[:, None] * nc[None, :]
+    absterm = (w * 2.0 ** -120) * (1.0 + nq[:, None] + nc[None, :])
+    if precision == "bf16":
+        # 2e + e^2 input rounding (e = 2^-8), ~3 gamma_w for the two
+        # f32 accumulations + cross-backend formula ordering, inflated
+        # for the f32 evaluation of the norms and of this very formula
+        coef = ((2.0 ** -7 + 2.0 ** -16 + 3.0 * w * 2.0 ** -24)
+                * (1.0 + w * 2.0 ** -20))
+        return coef * outer + absterm
+    if precision != "int8":
+        raise ValueError(f"no bound radius for precision={precision!r}")
+    rw = float(np.sqrt(w))
+    nq_hat = nq + 0.5 * rw * sq          # ||dequantized row|| bound
+    core = 0.5 * rw * (nq_hat[:, None] * sc[None, :]
+                       + sq[:, None] * nc[None, :])
+    acc = (4.0 * w * 2.0 ** -24) * outer
+    return core * (1.0 + 2.0 ** -12 + w * 2.0 ** -20) + acc + absterm
+
+
+def _quantize_i8(x, scale):
+    return jnp.clip(jnp.round(x / scale[:, None]),
+                    -127.0, 127.0).astype(jnp.int8)
+
+
+@register_bound_backend("xla")
+def bound_dot_xla(q, c, *, precision: str, sq=None, sc=None):
+    if precision == "bf16":
+        return lax.dot_general(q.astype(jnp.bfloat16),
+                               c.astype(jnp.bfloat16),
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    # int8: exact int32 accumulation (127^2 * w < 2^31 for any sane w),
+    # error enters only through quantization + the f32 dequant scaling
+    acc = lax.dot_general(_quantize_i8(q, sq), _quantize_i8(c, sc),
+                          (((1,), (1,)), ((), ())),
+                          preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sq[:, None] * sc[None, :]
+
+
+def _round_bf16_np(a: np.ndarray) -> np.ndarray:
+    """Round-to-nearest-even to bf16, returned as f32 (bit-level
+    emulation of XLA's convert_element_type)."""
+    bits = np.ascontiguousarray(np.asarray(a, np.float32)).view(
+        np.uint32)
+    rounded = (bits + np.uint32(0x7FFF)
+               + ((bits >> np.uint32(16)) & np.uint32(1))
+               ) & np.uint32(0xFFFF0000)
+    return rounded.view(np.float32)
+
+
+def _bound_bf16_np(q, c) -> np.ndarray:
+    return (_round_bf16_np(q)
+            @ _round_bf16_np(c).T).astype(np.float32)
+
+
+def _bound_i8_np(q, c, sq, sc) -> np.ndarray:
+    q32 = np.asarray(q, np.float32)
+    c32 = np.asarray(c, np.float32)
+    sq = np.asarray(sq, np.float32)
+    sc = np.asarray(sc, np.float32)
+    # nan_to_num keeps poisoned padding lanes (sanitizer canaries) out
+    # of the float->int cast, which would warn; live lanes are finite
+    # and unchanged
+    qi = np.nan_to_num(np.clip(np.rint(q32 / sq[:, None]), -127, 127),
+                       nan=0.0).astype(np.int32)
+    ci = np.nan_to_num(np.clip(np.rint(c32 / sc[:, None]), -127, 127),
+                       nan=0.0).astype(np.int32)
+    dots = (qi @ ci.T).astype(np.float32)
+    return dots * sq[:, None] * sc[None, :]
+
+
+@register_bound_backend("numpy")
+def bound_dot_numpy(q, c, *, precision: str, sq=None, sc=None):
+    out = jax.ShapeDtypeStruct((q.shape[0], c.shape[0]), jnp.float32)
+    if precision == "bf16":
+        return jax.pure_callback(_bound_bf16_np, out, q, c)
+    return jax.pure_callback(_bound_i8_np, out, q, c, sq, sc)
+
+
+def _bound_dot_kernel_bf16(q_ref, c_ref, o_ref):
+    o_ref[...] = lax.dot_general(q_ref[...].astype(jnp.bfloat16),
+                                 c_ref[...].astype(jnp.bfloat16),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+
+@register_bound_backend("pallas")
+def bound_dot_pallas(q, c, *, precision: str, sq=None, sc=None,
+                     interpret: bool | None = None):
+    """bf16 MXU bound tile — inputs round to bf16 *inside* the kernel
+    so VMEM traffic stays f32-aligned with the exact tiles.  The int8
+    variant rides the xla lowering (int8 MXU tiling is a separate
+    project; the bound contract only cares about the rounding model,
+    which is identical)."""
+    if precision != "bf16":
+        return bound_dot_xla(q, c, precision=precision, sq=sq, sc=sc)
+    if interpret is None:
+        interpret = default_interpret()
+    bq, bc = q.shape[0], c.shape[0]
+    rows_q = BLOCK_Q if bq > BLOCK_Q else 8
+    q = pad_to(pad_to(q, 128, axis=1), rows_q, axis=0)
+    c = pad_to(pad_to(c, 128, axis=1), BLOCK_C, axis=0)
+    bq_p, w_p = q.shape
+    bc_p = c.shape[0]
+    blk_q = min(bq_p, BLOCK_Q)
+    dots = pl.pallas_call(
+        _bound_dot_kernel_bf16,
         grid=(bq_p // blk_q, bc_p // BLOCK_C),
         in_specs=[
             pl.BlockSpec((blk_q, w_p), lambda i, j: (i, 0)),

@@ -301,6 +301,11 @@ class DiscordServer:
             return ("profile_mb", op["s"], op["Lb"])
         if kind == "tail":
             return ("tail_mb", op["s"], op["Lb"], op["Qb"])
+        if kind == "qtail":
+            # the quantized stream tail has no micro-batch plan (its
+            # refinement pass is data-dependent per stream), so each
+            # op keys uniquely and takes the len==1 generic dispatch
+            return ("qtail", op["s"], op["Lb"], op["Qb"], id(op))
         if kind == "pan_fill":
             return ("pan_mb", op["ladder"], op["Lb"])
         return ("pan_tail_mb", op["ladder"], op["Lb"], op["Qb"])

@@ -14,15 +14,18 @@
      static-speckey CLI never initializes jax; exit codes gate on
      findings; ``launch/discord.py --selfcheck`` is wired up.
   5. IRLINT — ``plan_kind_registry`` covers every ``*_plan`` builder;
-     the static lane/FLOP model equals the runtime formulas (all 18
-     kinds, 1/2/4 devs) and the *executed* ``tile_lanes`` deltas; the
+     the static lane/FLOP model equals the runtime formulas (all 23
+     kinds, 1/2/4 devs) and the *executed* ``tile_lanes`` deltas
+     (quantized kinds decompose into bound + refinement lanes); the
      repo's jaxprs audit clean; each IR rule fires on a synthetic
-     true positive (f64 literal, unpinned dot_general, smuggled
-     callback, oversized const, miscounted lane model) and stays
-     quiet on the near-miss.
+     true positive (f64 literal, unpinned dot_general — including a
+     bare bf16 bound dot, smuggled callback, oversized const,
+     miscounted lane model) and stays quiet on the near-miss.
   6. SHADOW — f64 replay is clean on the real engines; the regret
      comparator flags drifted positions and diverging nnds; inflated
-     tile numerics are caught end to end.
+     tile numerics are caught end to end; the quantized kinds replay
+     per precision under the same regret gate and must prune on the
+     benign series (a vacuous bound radius is flagged).
   7. CLI — the wall-clock budget and the new passes gate exit codes
      and populate the v2 report counts.
 """
@@ -269,15 +272,18 @@ def test_coverage_names_every_field():
     # jax-free cross-check against the dataclass via source parse is
     # what static_audit does; here just pin the audited surface
     assert set(cov) == {"s", "k", "method", "znorm", "backend", "P",
-                        "alpha", "seed", "r", "block", "ndev"}
+                        "alpha", "seed", "r", "block", "ndev",
+                        "precision"}
     assert "UNCOVERED" not in cov.values()
 
 
 def test_static_audit_catches_dropped_field():
     src = ENGINE_PATH.read_text()
     broken = src.replace(
-        'PLAN_KEY_FIELDS = ("s", "backend", "znorm", "block", "ndev")',
-        'PLAN_KEY_FIELDS = ("s", "backend", "block", "ndev")')
+        'PLAN_KEY_FIELDS = ("s", "backend", "znorm", "block", "ndev",\n'
+        '                   "precision")',
+        'PLAN_KEY_FIELDS = ("s", "backend", "block", "ndev",\n'
+        '                   "precision")')
     assert broken != src
     findings = static_audit(engine_source=broken)
     assert any(f.rule == "field-partition" and "znorm" in f.message
@@ -287,8 +293,8 @@ def test_static_audit_catches_dropped_field():
 def test_static_audit_catches_gutted_plan_key():
     src = ENGINE_PATH.read_text()
     broken = src.replace(
-        'return (self.backend, self.spec.znorm, self.spec.block) \\\n'
-        '            + tuple(key)',
+        'return (self.backend, self.spec.znorm, self.spec.block,\n'
+        '                self.spec.precision) + tuple(key)',
         'return tuple(key)')
     assert broken != src
     findings = static_audit(engine_source=broken)
@@ -298,14 +304,15 @@ def test_static_audit_catches_gutted_plan_key():
 
 def test_static_audit_catches_nonliteral_key():
     src = ("PLAN_KEY_FIELDS = (\"s\", \"backend\", \"znorm\", "
-           "\"block\", \"ndev\")\n"
+           "\"block\", \"ndev\", \"precision\")\n"
            "KIND_DISPATCH_FIELDS = (\"method\",)\n"
            "TRACE_INVARIANT_FIELDS = (\"k\", \"P\", \"alpha\", "
            "\"seed\", \"r\")\n"
            "class DiscordEngine:\n"
            "    def _plan_key(self, key):\n"
            "        return (self.backend, self.spec.znorm,\n"
-           "                self.spec.block) + tuple(key)\n"
+           "                self.spec.block,\n"
+           "                self.spec.precision) + tuple(key)\n"
            "    def _profile_plan(self, s, Lb):\n"
            "        return self._get_plan(make_key(s, Lb), build)\n")
     findings = static_audit(engine_source=src)
@@ -373,6 +380,11 @@ def test_selfcheck_maps_spec_to_kind_family():
                                       method="matrix_profile")) \
         == ("pan", "pan_lb", "pan_tail", "pan_batched")
     assert _kinds_for_spec(SearchSpec(s=24, method="hst")) == ()
+    assert _kinds_for_spec(SearchSpec(
+        s=24, method="matrix_profile", precision="bf16")) \
+        == ("qsweep", "qsweep_tail")
+    assert _kinds_for_spec(SearchSpec(
+        s=24, method="ring", precision="int8")) == ("qsweep_ring",)
 
 
 # ---------------------------------------------------------------------
@@ -479,7 +491,10 @@ def test_plan_kind_registry_covers_every_builder():
     from repro.analysis.irlint import coverage_audit
     from repro.core.engine import DiscordEngine, plan_kind_registry
     reg = plan_kind_registry()
-    assert len(reg) == 18
+    assert len(reg) == 23
+    for kind in ("qsweep", "qsweep_refine", "qsweep_tail",
+                 "qsweep_tail_refine", "qsweep_ring"):
+        assert kind in reg, f"registry lost quantized kind {kind}"
     builders = {n for n in dir(DiscordEngine)
                 if n.endswith("_plan") and n.startswith("_")
                 and not n.startswith(("_get", "_require"))
@@ -526,13 +541,21 @@ def test_lane_model_matches_executed_tile_lanes():
     ring = DiscordEngine(SearchSpec(s=24, method="ring", ndev=1,
                                     **base))
     assert delta(ring, lambda e: e.search(x)) == reg["ring"].lanes
+    # quantized plane: the registry entry carries the bound pass;
+    # refinement lanes are data-dependent and booked on top
+    q = DiscordEngine(SearchSpec(s=24, method="matrix_profile",
+                                 precision="bf16", **base))
+    before = q.stats.tile_lanes
+    rq = q.search(x)
+    assert q.stats.tile_lanes - before \
+        == reg["qsweep"].lanes + rq.extra["refine_calls"]
 
 
 def test_irlint_repo_clean():
     from repro.analysis.irlint import run_irlint
     findings, meta = run_irlint(backends=("numpy", "xla"))
     assert findings == []
-    assert len(meta["lane_model"]) == 18
+    assert len(meta["lane_model"]) == 23
     for entry in meta["lane_model"].values():
         assert entry["model_lanes"] == entry["tile_lanes"]
 
@@ -564,6 +587,39 @@ def test_irlint_dot_pet_tp_and_near_miss():
             a, b, dn, preferred_element_type=jnp.float32),
         avals=avals)
     assert [f.rule for f in findings] == []
+
+
+def test_irlint_bf16_dot_pet_tp_and_near_miss():
+    # the qsweep bound tiles cast to bf16 and must pin the MXU
+    # accumulator back to f32 — a bare bf16 dot (bf16 accumulation /
+    # bf16 output) is exactly the drift the rule exists to catch
+    import jax.numpy as jnp
+    from jax import lax
+    dn = (((1,), (1,)), ((), ()))
+    avals = (((4, 8), "float32"), ((6, 8), "float32"))
+
+    findings, _ = _fake_cell(
+        lambda a, b: lax.dot_general(a.astype(jnp.bfloat16),
+                                     b.astype(jnp.bfloat16), dn),
+        avals=avals)
+    assert any(f.rule == "ir-dot-pet" for f in findings)
+    findings, _ = _fake_cell(
+        lambda a, b: lax.dot_general(
+            a.astype(jnp.bfloat16), b.astype(jnp.bfloat16), dn,
+            preferred_element_type=jnp.float32),
+        avals=avals)
+    assert not any(f.rule == "ir-dot-pet" for f in findings)
+
+
+def test_irlint_clean_on_qsweep_kinds():
+    from repro.analysis.irlint import run_irlint
+    findings, meta = run_irlint(
+        backends=("xla",),
+        kinds=("qsweep", "qsweep_refine", "qsweep_tail",
+               "qsweep_tail_refine"))
+    assert findings == []
+    for kind, entry in meta["lane_model"].items():
+        assert entry["model_lanes"] == entry["tile_lanes"], kind
 
 
 def test_irlint_callback_smuggled_into_device_plan():
@@ -662,6 +718,38 @@ def test_shadow_comparator_detects_drift_and_divergence():
     findings, _ = run(SimpleNamespace(positions=[worst_pos, pos[1]],
                                       nnds=vals))
     assert any(f.rule == "topk-drift" for f in findings)
+
+
+def test_shadow_qsweep_replays_with_nonzero_benign_prune():
+    from repro.analysis.shadow import run_shadow
+    findings, meta = run_shadow(backends=("xla",), znorms=(True,),
+                                kinds=("qsweep",),
+                                precisions=("bf16", "int8"))
+    assert findings == []
+    for prec in ("bf16", "int8"):
+        cell = meta["cells"][f"qsweep:{prec}[xla,znorm=True]"]
+        # hostile series: the offset inflates the radius, pruning is
+        # legitimately vacuous there — but the benign replay must prune
+        assert cell["hostile_prune_ratio"] == 0.0
+        assert cell["benign_prune_ratio"] > 0.0
+
+
+def test_shadow_catches_vacuous_bound(monkeypatch):
+    # inflate the error radius beyond use: bounds stay sound (wider),
+    # every exactness gate still passes, but the benign-series replay
+    # must flag the dead prune
+    from repro.analysis.shadow import run_shadow
+    from repro.core import engine as engine_mod
+
+    orig = engine_mod.bound_dot_radius
+    monkeypatch.setattr(
+        engine_mod, "bound_dot_radius",
+        lambda *a, **kw: orig(*a, **kw) + 1e30)
+    findings, _ = run_shadow(backends=("xla",), znorms=(True,),
+                             kinds=("qsweep",), precisions=("bf16",))
+    assert any(f.rule == "qsweep-no-prune" for f in findings)
+    assert not any(f.rule in ("topk-drift", "nnd-divergence")
+                   for f in findings)
 
 
 def test_shadow_catches_inflated_tile_numerics(monkeypatch):

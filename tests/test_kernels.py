@@ -88,6 +88,41 @@ def test_async_dispatch_guard_env_escape():
     assert val == "True"
 
 
+_QSWEEP_SYNC = r"""
+import jax
+jax.config.update("jax_cpu_enable_async_dispatch", False)
+import numpy as np
+from repro.core import DiscordEngine, SearchSpec
+
+rng = np.random.default_rng(0)
+x = np.sin(0.2 * np.arange(420.0)) + 0.1 * rng.standard_normal(420)
+spec = SearchSpec(s=24, k=2, method="matrix_profile",
+                  precision="bf16", block=32, backend="numpy")
+eng = DiscordEngine(spec)
+r = eng.search(x)
+st = eng.open_stream(s=24, history=x[:300])
+st.append(x[300:])
+d = st.discords()
+assert r.calls == r.tile_lanes + r.extra["refine_calls"]
+assert d.calls == st.tile_lanes + st.refine_calls
+print("qsweep-sync-ok")
+"""
+
+
+def test_qsweep_two_phase_dispatch_under_sync_guard():
+    """The quantized plane interleaves dispatch and host work twice
+    per search (bound-pass fetch, then a data-dependent number of
+    refinement calls) with ``pure_callback`` tiles on the numpy
+    backend — the exact shape that deadlocked under the one-CPU
+    async-dispatch pool.  Force the guard's synchronous-dispatch
+    state and run both phases (search + stream tail) end to end."""
+    out = subprocess.run([sys.executable, "-c", _QSWEEP_SYNC],
+                         capture_output=True, text=True, timeout=300,
+                         env=dict(os.environ))
+    assert out.returncode == 0, out.stderr
+    assert "qsweep-sync-ok" in out.stdout
+
+
 def test_zdist_excludes_self_matches():
     rng = np.random.default_rng(0)
     x = rng.normal(size=800).astype(np.float32)
